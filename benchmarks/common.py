@@ -1,0 +1,76 @@
+"""Shared benchmark helpers: paper-experiment harness over the SimCluster."""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.anomaly import InjectionSchedule, SimCluster  # noqa: E402
+from repro.core import (  # noqa: E402
+    BigRootsAnalyzer,
+    BigRootsThresholds,
+    PCCAnalyzer,
+    PCCThresholds,
+    SPARK_FEATURES,
+    evaluate,
+    found_set,
+)
+
+RESOURCE_FEATURES = ("cpu", "disk", "network")
+DEFAULT_TH = BigRootsThresholds(quantile=0.8)
+
+
+def run_injected(kind: str, seed: int, profile: str = "naivebayes_large",
+                 node: str = "slave2", period: float = 45.0, burst: float = 25.0):
+    """One paper-§IV-B experiment: baseline run → injected run → (result, sched)."""
+    base = SimCluster(seed=seed, profile=profile).run()
+    sched = InjectionSchedule.intermittent(
+        node, kind, base.job_duration, period=period, burst=burst
+    )
+    return SimCluster(seed=seed, profile=profile).run(sched), base
+
+
+def straggler_universe(res, thresholds=DEFAULT_TH, features=None) -> set:
+    an = BigRootsAnalyzer(SPARK_FEATURES, thresholds, timelines=res.timelines)
+    names = list(features or SPARK_FEATURES.names)
+    universe = set()
+    for sa in an.analyze(res.trace):
+        for tid in sa.straggler_ids:
+            for f in names:
+                universe.add((tid, f))
+    return universe
+
+
+def bigroots_found(res, thresholds=DEFAULT_TH, edge: bool = True) -> set:
+    an = BigRootsAnalyzer(
+        SPARK_FEATURES, thresholds, timelines=res.timelines if edge else None
+    )
+    return found_set(an.root_causes(res.trace))
+
+
+def pcc_found(res, thresholds: PCCThresholds = PCCThresholds()) -> set:
+    return PCCAnalyzer(SPARK_FEATURES, thresholds).root_cause_set(res.trace)
+
+
+def confusion(found: set, res, universe: set):
+    """TP against injected truth; organic causes are neither TP nor FP
+    (the sim knows them exactly — see DESIGN.md §7)."""
+    found = found & universe
+    organic = res.truth_organic & universe
+    truth = res.truth_ag & universe
+    eval_universe = universe - (organic - truth)
+    return evaluate(found - organic, truth, eval_universe)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.seconds * 1e6

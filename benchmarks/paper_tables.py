@@ -1,0 +1,274 @@
+"""Paper-table replications (Table III, V, VI, VII; Fig. 7, 8, 9) on the
+seeded SimCluster.  Each function returns (rows, csv_rows) where csv_rows
+follow the harness convention (name, us_per_call, derived)."""
+from __future__ import annotations
+
+import itertools
+import os
+import resource
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.anomaly import InjectionSchedule, SimCluster, WORKLOAD_PROFILES  # noqa: E402
+from repro.core import (  # noqa: E402
+    BigRootsAnalyzer,
+    BigRootsThresholds,
+    PCCAnalyzer,
+    PCCThresholds,
+    SPARK_FEATURES,
+    auc,
+    evaluate,
+    roc_sweep,
+    summarize,
+)
+from repro.telemetry import ResourceTimeline, SystemSampler  # noqa: E402
+
+from .common import (  # noqa: E402
+    DEFAULT_TH,
+    Timer,
+    bigroots_found,
+    confusion,
+    pcc_found,
+    run_injected,
+    straggler_universe,
+)
+
+SEEDS = range(5)
+
+
+# ---------------------------------------------------------------------------
+# Table III: TP/FP under single-AG injection, BigRoots vs PCC
+# ---------------------------------------------------------------------------
+def table3(seeds=SEEDS):
+    rows = []
+    csv = []
+    for kind in ("cpu", "disk", "network"):
+        agg = {"b": [0, 0], "p": [0, 0]}
+        with Timer() as t:
+            for seed in seeds:
+                res, _ = run_injected(kind, seed)
+                uni = straggler_universe(res)
+                cb = confusion(bigroots_found(res), res, uni)
+                cp = confusion(pcc_found(res), res, uni)
+                agg["b"][0] += cb.tp
+                agg["b"][1] += cb.fp
+                agg["p"][0] += cp.tp
+                agg["p"][1] += cp.fp
+        rows.append((kind, *agg["b"], *agg["p"]))
+        csv.append((f"table3/{kind}_ag", t.us / len(list(seeds)),
+                    f"bigroots_tp={agg['b'][0]};bigroots_fp={agg['b'][1]};"
+                    f"pcc_tp={agg['p'][0]};pcc_fp={agg['p'][1]}"))
+    return rows, csv
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: job duration impact per AG kind (+ mixed)
+# ---------------------------------------------------------------------------
+def fig7(seeds=SEEDS):
+    import random
+
+    rows, csv = [], []
+    for kind in ("cpu", "disk", "network", "mixed"):
+        delays = []
+        with Timer() as t:
+            for seed in seeds:
+                base = SimCluster(seed=seed, profile="naivebayes_large").run()
+                if kind == "mixed":
+                    sched = InjectionSchedule.random_multi_node(
+                        [f"slave{i+1}" for i in range(5)], base.job_duration,
+                        random.Random(seed), events_per_node=(1, 2),
+                    )
+                else:
+                    sched = InjectionSchedule.intermittent(
+                        "slave2", kind, base.job_duration, period=28, burst=14
+                    )
+                res = SimCluster(seed=seed, profile="naivebayes_large").run(sched)
+                delays.append(100.0 * (res.job_duration / base.job_duration - 1))
+        mean_delay = float(np.mean(delays))
+        rows.append((kind, mean_delay))
+        csv.append((f"fig7/{kind}", t.us / len(list(seeds)),
+                    f"mean_job_delay_pct={mean_delay:.2f}"))
+    return rows, csv
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: ROC / AUC threshold sweeps, BigRoots vs PCC
+# ---------------------------------------------------------------------------
+def fig8(seeds=range(3)):
+    import random
+
+    rows, csv = [], []
+    b_grid = list(itertools.product(
+        (0.5, 0.6, 0.7, 0.8, 0.9, 0.95), (1.0, 1.25, 1.5, 2.0, 3.0)
+    ))
+    p_grid = list(itertools.product(
+        (0.1, 0.3, 0.5, 0.7, 0.9), (0.5, 0.7, 0.8, 0.9, 0.95)
+    ))
+    for kind in ("cpu", "disk", "network", "mixed"):
+        results = []
+        for seed in seeds:
+            if kind == "mixed":
+                base = SimCluster(seed=seed, profile="naivebayes_large").run()
+                sched = InjectionSchedule.random_multi_node(
+                    [f"slave{i+1}" for i in range(5)], base.job_duration,
+                    random.Random(seed), events_per_node=(1, 3),
+                )
+                res = SimCluster(seed=seed, profile="naivebayes_large").run(sched)
+            else:
+                res, _ = run_injected(kind, seed)
+            results.append(res)
+
+        def eval_grid(found_fn, grid):
+            pts = []
+            for params in grid:
+                tp = fp = fn = tn = 0
+                for res in results:
+                    uni = straggler_universe(res)
+                    c = confusion(found_fn(res, params), res, uni)
+                    tp += c.tp
+                    fp += c.fp
+                    fn += c.fn
+                    tn += c.tn
+                from repro.core import ConfusionCounts
+
+                cc = ConfusionCounts(tp=tp, tn=tn, fp=fp, fn=fn)
+                pts.append((cc.fpr, cc.tpr))
+            from repro.core.roc import RocPoint
+
+            return [RocPoint(f, tpr, ()) for f, tpr in pts]
+
+        with Timer() as t:
+            b_pts = eval_grid(
+                lambda res, p: bigroots_found(
+                    res, BigRootsThresholds(quantile=p[0], peer_mean=p[1])
+                ),
+                b_grid,
+            )
+            p_pts = eval_grid(
+                lambda res, p: pcc_found(
+                    res, PCCThresholds(pearson=p[0], max_quantile=p[1])
+                ),
+                p_grid,
+            )
+        auc_b, auc_p = auc(b_pts), auc(p_pts)
+        rows.append((kind, auc_b, auc_p))
+        csv.append((f"fig8/{kind}", t.us,
+                    f"auc_bigroots={auc_b:.3f};auc_pcc={auc_p:.3f};"
+                    f"auc_gain_pct={100 * (auc_b - auc_p) / max(auc_p, 1e-9):.1f}"))
+    return rows, csv
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9: edge-detection ablation (FPR / ACC with vs without)
+# ---------------------------------------------------------------------------
+def fig9(seeds=SEEDS):
+    rows, csv = [], []
+    for kind in ("cpu", "disk", "network"):
+        tot = {"edge": [0, 0, 0, 0], "noedge": [0, 0, 0, 0]}
+        with Timer() as t:
+            for seed in seeds:
+                res, _ = run_injected(kind, seed)
+                uni = straggler_universe(res)
+                for label, edge in (("edge", True), ("noedge", False)):
+                    c = confusion(bigroots_found(res, edge=edge), res, uni)
+                    tot[label][0] += c.tp
+                    tot[label][1] += c.tn
+                    tot[label][2] += c.fp
+                    tot[label][3] += c.fn
+        from repro.core import ConfusionCounts
+
+        ce = ConfusionCounts(*tot["edge"])
+        cn = ConfusionCounts(*tot["noedge"])
+        rows.append((kind, ce.fpr, cn.fpr, ce.acc, cn.acc))
+        fpr_drop = (100 * (cn.fpr - ce.fpr) / cn.fpr) if cn.fpr else 0.0
+        csv.append((f"fig9/{kind}", t.us,
+                    f"fpr_with_edge={ce.fpr:.4f};fpr_no_edge={cn.fpr:.4f};"
+                    f"fpr_drop_pct={fpr_drop:.1f};"
+                    f"acc_with_edge={ce.acc:.4f};acc_no_edge={cn.acc:.4f}"))
+    return rows, csv
+
+
+# ---------------------------------------------------------------------------
+# Table V: random multi-node mixed AGs
+# ---------------------------------------------------------------------------
+def table5(seeds=SEEDS):
+    import random
+
+    from repro.core import ConfusionCounts
+
+    tot_b = [0, 0, 0, 0]
+    tot_p = [0, 0, 0, 0]
+    with Timer() as t:
+        for seed in seeds:
+            base = SimCluster(seed=seed, profile="naivebayes_large").run()
+            sched = InjectionSchedule.random_multi_node(
+                [f"slave{i+1}" for i in range(5)], base.job_duration,
+                random.Random(100 + seed), events_per_node=(2, 4),
+            )
+            res = SimCluster(seed=seed, profile="naivebayes_large").run(sched)
+            uni = straggler_universe(res)
+            for tot, found in ((tot_b, bigroots_found(res)),
+                               (tot_p, pcc_found(res))):
+                c = confusion(found, res, uni)
+                tot[0] += c.tp
+                tot[1] += c.tn
+                tot[2] += c.fp
+                tot[3] += c.fn
+    cb, cp = ConfusionCounts(*tot_b), ConfusionCounts(*tot_p)
+    rows = [("bigroots", cb), ("pcc", cp)]
+    csv = [(
+        "table5/multi_anomaly", t.us,
+        f"bigroots_fpr={100*cb.fpr:.2f}%;bigroots_tpr={100*cb.tpr:.2f}%;"
+        f"bigroots_acc={100*cb.acc:.2f}%;pcc_fpr={100*cp.fpr:.2f}%;"
+        f"pcc_tpr={100*cp.tpr:.2f}%;pcc_acc={100*cp.acc:.2f}%",
+    )]
+    return rows, csv
+
+
+# ---------------------------------------------------------------------------
+# Table VI: per-workload case study
+# ---------------------------------------------------------------------------
+def table6():
+    rows, csv = [], []
+    for name in ("kmeans", "bayes", "lr", "pca", "svm", "sort", "terasort",
+                 "wordcount", "nweight", "aggregation", "pagerank"):
+        with Timer() as t:
+            res = SimCluster(seed=42, profile=name, nodes=5).run()
+            an = BigRootsAnalyzer(SPARK_FEATURES, DEFAULT_TH,
+                                  timelines=res.timelines)
+            analyses = an.analyze(res.trace)
+            s = summarize(analyses)
+        top = ", ".join(f"{f} ({c})" for f, c in
+                        s.causes_by_feature.most_common(4)) or "-"
+        rows.append((name, top, s.num_stragglers))
+        csv.append((f"table6/{name}", t.us,
+                    f"stragglers={s.num_stragglers};causes={top!r}"))
+    return rows, csv
+
+
+# ---------------------------------------------------------------------------
+# Table VII: sampler overhead (real /proc sampler on this host)
+# ---------------------------------------------------------------------------
+def table7(duration_s: float = 3.0):
+    tl = ResourceTimeline()
+    sampler = SystemSampler("bench", tl, interval=0.05)
+    ru0 = resource.getrusage(resource.RUSAGE_SELF)
+    t0 = time.time()
+    with sampler:
+        time.sleep(duration_s)
+    ru1 = resource.getrusage(resource.RUSAGE_SELF)
+    wall = time.time() - t0
+    cpu_pct = 100.0 * (
+        (ru1.ru_utime + ru1.ru_stime) - (ru0.ru_utime + ru0.ru_stime)
+    ) / wall
+    n = len(tl)
+    per_sample_us = (wall / max(n // 3, 1)) * 1e6  # 3 metrics per tick
+    mem_kb = ru1.ru_maxrss
+    rows = [("proc_sampler", cpu_pct, mem_kb, n)]
+    csv = [("table7/sampler_overhead", per_sample_us,
+            f"cpu_pct={cpu_pct:.2f};maxrss_kb={mem_kb};samples={n}")]
+    return rows, csv

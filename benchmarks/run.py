@@ -1,0 +1,45 @@
+"""Benchmark harness: one function per paper table/figure + beyond-paper
+scale/kernel benches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table3 fig8
+"""
+from __future__ import annotations
+
+import sys
+
+from . import paper_tables, scale_bench
+
+BENCHES = {
+    "table3": paper_tables.table3,
+    "fig7": paper_tables.fig7,
+    "fig8": paper_tables.fig8,
+    "fig9": paper_tables.fig9,
+    "table5": paper_tables.table5,
+    "table6": paper_tables.table6,
+    "table7": paper_tables.table7,
+    "analyzer_scale": scale_bench.analyzer_scale,
+    "kernels": scale_bench.kernel_bench,
+    "e2e_train": scale_bench.e2e_train_bench,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        fn = BENCHES[name]
+        try:
+            _rows, csv_rows = fn()
+            for row_name, us, derived in csv_rows:
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

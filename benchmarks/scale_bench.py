@@ -1,0 +1,167 @@
+"""Beyond-paper benchmarks: analyzer throughput at 1000+ node scale and
+kernel microbenchmarks (interpret-mode wall times — CPU, labeled as such)."""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    BigRootsAnalyzer,
+    JAX_FEATURES,
+    StageRecord,
+    TaskRecord,
+)
+
+from .common import Timer  # noqa: E402
+
+
+def _synthetic_stage(n_hosts: int, seed: int = 0) -> StageRecord:
+    """One step window across n_hosts hosts (per-host step TaskRecords)."""
+    rng = np.random.default_rng(seed)
+    dur = rng.lognormal(mean=0.0, sigma=0.08, size=n_hosts) * 10.0
+    slow = rng.choice(n_hosts, size=max(n_hosts // 100, 1), replace=False)
+    dur[slow] *= 2.0
+    tasks = []
+    for i in range(n_hosts):
+        feats = {
+            "cpu": float(rng.uniform(0.1, 0.3)),
+            "disk": float(rng.uniform(0.0, 0.2)),
+            "network": float(rng.uniform(1e5, 1e6)),
+            "read_bytes": float(rng.uniform(0.9, 1.1) * 64e6),
+            "gc_time": float(rng.uniform(0, 0.05)),
+            "data_load_time": float(rng.uniform(0, 0.4)),
+            "h2d_time": float(rng.uniform(0, 0.1)),
+        }
+        if i in slow:
+            feats["cpu"] = 0.95
+        tasks.append(TaskRecord(
+            task_id=f"h{i}/s0", stage_id="s0", node=f"h{i}",
+            start=0.0, end=float(dur[i]), features=feats,
+        ))
+    return StageRecord("s0", tasks)
+
+
+def analyzer_scale():
+    """Vectorized analyzer wall time per step-window vs cluster size."""
+    rows, csv = [], []
+    an = BigRootsAnalyzer(JAX_FEATURES)
+    for n_hosts in (256, 1024, 4096, 16384):
+        stage = _synthetic_stage(n_hosts)
+        an.analyze_stage(stage)  # warm
+        reps = 5
+        with Timer() as t:
+            for _ in range(reps):
+                sa = an.analyze_stage(stage)
+        per_call = t.us / reps
+        rows.append((n_hosts, per_call, len(sa.straggler_ids)))
+        csv.append((f"scale/analyzer_{n_hosts}_hosts", per_call,
+                    f"stragglers={len(sa.straggler_ids)};"
+                    f"per_host_ns={1000 * per_call / n_hosts:.0f}"))
+    return rows, csv
+
+
+def kernel_bench():
+    """Interpret-mode kernel timings vs jnp references (CPU walltime; the
+    interesting column is allclose-verified equivalence + shapes)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    from repro.kernels.flash_attention import flash_attention
+
+    rows, csv = [], []
+    key = jax.random.key(0)
+
+    # flash attention, one production-ish tile
+    BH, S, D = 8, 512, 128
+    q = jax.random.normal(key, (BH, S, D), jnp.float32)
+    k = jax.random.normal(key, (BH, S, D), jnp.float32)
+    v = jax.random.normal(key, (BH, S, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out - want)))
+    with Timer() as t:
+        flash_attention(q, k, v, causal=True, interpret=True).block_until_ready()
+    csv.append(("kernel/flash_attention_interp", t.us,
+                f"max_err={err:.2e};shape={BH}x{S}x{D}"))
+    rows.append(("flash_attention", t.us, err))
+
+    # decode attention
+    from repro.kernels.decode_attention import decode_attention
+
+    q2 = jax.random.normal(key, (BH, D), jnp.float32)
+    kc = jax.random.normal(key, (BH, 2048, D), jnp.float32)
+    vc = jax.random.normal(key, (BH, 2048, D), jnp.float32)
+    clen = jnp.asarray(1500, jnp.int32)
+    out = decode_attention(q2, kc, vc, clen, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref.decode_attention_ref(q2, kc, vc, clen))))
+    with Timer() as t:
+        decode_attention(q2, kc, vc, clen, interpret=True).block_until_ready()
+    csv.append(("kernel/decode_attention_interp", t.us,
+                f"max_err={err:.2e};cache=2048"))
+    rows.append(("decode_attention", t.us, err))
+
+    # ssd intra-chunk
+    from repro.kernels.ssd_scan import ssd_intra_chunk
+
+    x = jax.random.normal(key, (2, 8, 4, 128, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 8, 4, 128)))
+    A = -jnp.exp(jax.random.normal(key, (8,)))
+    B_ = jax.random.normal(key, (2, 8, 4, 128, 64), jnp.float32)
+    C = jax.random.normal(key, (2, 8, 4, 128, 64), jnp.float32)
+    y, s, seg = ssd_intra_chunk(x, dt, A, B_, C, interpret=True)
+    yr, sr, _ = ref.ssd_intra_chunk_ref(x, dt, A, B_, C)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    with Timer() as t:
+        ssd_intra_chunk(x, dt, A, B_, C, interpret=True)[0].block_until_ready()
+    csv.append(("kernel/ssd_intra_chunk_interp", t.us, f"max_err={err:.2e}"))
+    rows.append(("ssd_intra_chunk", t.us, err))
+
+    # grouped matmul
+    from repro.kernels.moe_gmm import grouped_matmul
+
+    xg = jax.random.normal(key, (8, 256, 256), jnp.float32)
+    wg = jax.random.normal(key, (8, 256, 128), jnp.float32)
+    out = grouped_matmul(xg, wg, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref.grouped_matmul_ref(xg, wg))))
+    with Timer() as t:
+        grouped_matmul(xg, wg, interpret=True).block_until_ready()
+    csv.append(("kernel/moe_gmm_interp", t.us, f"max_err={err:.2e}"))
+    rows.append(("moe_gmm", t.us, err))
+    return rows, csv
+
+
+def e2e_train_bench(steps: int = 8):
+    """Wall time per train step for a reduced config (real JAX compute)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, HostDataLoader
+    from repro.models import Model, smoke_variant
+    from repro.train import AdamWConfig, init_state, make_train_step
+
+    cfg = smoke_variant(get_config("granite_8b"))
+    model = Model(cfg)
+    opt = AdamWConfig(total_steps=steps)
+    state = init_state(model, jax.random.key(0), opt)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    loader = HostDataLoader(
+        DataConfig(vocab=cfg.vocab, seq_len=64, batch_per_host=4), 0, 1
+    )
+    import jax.numpy as jnp
+
+    batch, _ = loader.batch_at(0)
+    batch = jax.tree.map(jnp.asarray, batch)
+    state, m = step_fn(state, batch)  # compile
+    with Timer() as t:
+        for i in range(steps):
+            state, m = step_fn(state, batch)
+        jax.block_until_ready(m["loss"])
+    rows = [("train_step_smoke", t.us / steps)]
+    csv = [("e2e/train_step_smoke", t.us / steps,
+            f"loss={float(m['loss']):.3f};steps={steps}")]
+    return rows, csv

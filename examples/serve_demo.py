@@ -1,0 +1,15 @@
+"""Batched serving demo: prefill + decode a reduced GLM4 with 8 requests,
+with serve-side BigRoots telemetry.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "glm4_9b", "--smoke",
+                "--requests", "8", "--prompt-len", "12", "--max-new", "8"]
+    main()

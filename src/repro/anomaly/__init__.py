@@ -1,0 +1,19 @@
+"""Anomaly generation: real resource hogs (paper §IV-A AGs) + the
+deterministic simulated cluster used to replicate the paper's tables.
+"""
+from .generators import CpuAnomalyGenerator, IoAnomalyGenerator, NetworkAnomalyGenerator
+from .injector import Injection, InjectionSchedule, overlap
+from .sim import SimCluster, SimResult, WorkloadProfile, WORKLOAD_PROFILES
+
+__all__ = [
+    "CpuAnomalyGenerator",
+    "Injection",
+    "InjectionSchedule",
+    "IoAnomalyGenerator",
+    "NetworkAnomalyGenerator",
+    "SimCluster",
+    "SimResult",
+    "WORKLOAD_PROFILES",
+    "WorkloadProfile",
+    "overlap",
+]

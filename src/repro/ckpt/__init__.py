@@ -1,0 +1,4 @@
+"""Checkpointing: atomic, retained, optionally async, restore-with-reshard."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

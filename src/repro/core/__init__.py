@@ -1,0 +1,69 @@
+"""BigRoots core: root-cause analysis of stragglers (paper's contribution).
+
+Public API:
+
+    from repro.core import (
+        TaskRecord, StageRecord, Trace,
+        FeatureKind, FeatureSpec, FeatureSchema, SPARK_FEATURES, JAX_FEATURES,
+        BigRootsAnalyzer, BigRootsThresholds, RootCause, StageAnalysis,
+        PCCAnalyzer, PCCThresholds,
+        straggler_mask, straggler_scale,
+        evaluate, roc_sweep, auc, ConfusionCounts,
+        summarize, render_markdown,
+    )
+"""
+from .analyzer import (
+    BigRootsAnalyzer,
+    BigRootsThresholds,
+    RootCause,
+    StageAnalysis,
+    TimelineStore,
+    found_set,
+    normalize_features,
+)
+from .features import (
+    JAX_FEATURES,
+    SPARK_FEATURES,
+    FeatureKind,
+    FeatureSchema,
+    FeatureSpec,
+    get_schema,
+)
+from .pcc import PCCAnalyzer, PCCThresholds
+from .records import StageRecord, TaskRecord, Trace
+from .report import TraceSummary, per_stage_table, render_markdown, summarize
+from .roc import ConfusionCounts, RocPoint, auc, evaluate, roc_sweep
+from .straggler import DEFAULT_STRAGGLER_THRESHOLD, straggler_mask, straggler_scale
+
+__all__ = [
+    "BigRootsAnalyzer",
+    "BigRootsThresholds",
+    "ConfusionCounts",
+    "DEFAULT_STRAGGLER_THRESHOLD",
+    "FeatureKind",
+    "FeatureSchema",
+    "FeatureSpec",
+    "JAX_FEATURES",
+    "PCCAnalyzer",
+    "PCCThresholds",
+    "RocPoint",
+    "RootCause",
+    "SPARK_FEATURES",
+    "StageAnalysis",
+    "StageRecord",
+    "TaskRecord",
+    "TimelineStore",
+    "Trace",
+    "TraceSummary",
+    "auc",
+    "evaluate",
+    "found_set",
+    "get_schema",
+    "normalize_features",
+    "per_stage_table",
+    "render_markdown",
+    "roc_sweep",
+    "straggler_mask",
+    "straggler_scale",
+    "summarize",
+]

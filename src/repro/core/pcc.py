@@ -1,0 +1,99 @@
+"""Pearson Correlation Coefficient baseline (paper Eq. 8, refs [17, 18]).
+
+The comparison method BigRoots is evaluated against: a feature F is a
+straggler's root cause iff
+
+    |ρ(F, duration)| > λ_pearson   over all tasks of the stage, and
+    F > quantile_{λ_max}(F)        for that straggler's value.
+
+The paper calls the two knobs the *Pearson threshold* and *max threshold*
+(§IV-B.2).  Features are the RAW metrics, as in the method's sources
+(refs [17, 18] correlate raw workload/latency/system metrics): magnitudes
+are stage-mean scaled for comparability, but blocking times stay absolute —
+which is exactly why PCC inherits the paper's failure mode, "straggler
+feature and task duration is not linearly correlated and features may
+correlate with each other" (longer tasks mechanically accumulate more GC/
+serialization time, so those features correlate with duration for *every*
+straggler).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .features import FeatureKind, FeatureSchema
+from .records import StageRecord, Trace
+from .straggler import DEFAULT_STRAGGLER_THRESHOLD, straggler_mask
+
+
+def raw_features(tasks, schema: FeatureSchema):
+    """[tasks × features] matrix of raw metrics (numerical scaled by the
+    stage mean for cross-feature comparability; time/resource absolute)."""
+    n = len(tasks)
+    names = schema.names
+    F = np.zeros((n, len(names)), dtype=np.float64)
+    durations = np.array([max(t.duration, 1e-12) for t in tasks])
+    for i, t in enumerate(tasks):
+        for j, name in enumerate(names):
+            if name == "locality":
+                F[i, j] = float(t.locality)
+            else:
+                F[i, j] = float(t.features.get(name, 0.0))
+    for j, spec in enumerate(schema):
+        if spec.kind is FeatureKind.NUMERICAL:
+            mean = F[:, j].mean() if n else 0.0
+            F[:, j] = F[:, j] / mean if mean > 0 else 0.0
+    return F, durations
+
+
+@dataclass(frozen=True)
+class PCCThresholds:
+    pearson: float = 0.5       # λ_pearson: minimum |correlation coefficient|
+    max_quantile: float = 0.9  # λ_max: how close to the stage max F must be
+    straggler: float = DEFAULT_STRAGGLER_THRESHOLD
+
+
+class PCCAnalyzer:
+    def __init__(self, schema: FeatureSchema, thresholds: PCCThresholds = PCCThresholds()):
+        self.schema = schema
+        self.thresholds = thresholds
+
+    def root_cause_set(self, trace: Trace) -> set[tuple[str, str]]:
+        out: set[tuple[str, str]] = set()
+        for stage in trace.stages():
+            out |= self.analyze_stage(stage)
+        return out
+
+    def analyze_stage(self, stage: StageRecord) -> set[tuple[str, str]]:
+        tasks = stage.tasks
+        n = len(tasks)
+        if n < 2:
+            return set()
+        th = self.thresholds
+        F, durations = raw_features(tasks, self.schema)
+        smask = straggler_mask(durations, th.straggler)
+        if not smask.any():
+            return set()
+
+        # Pearson ρ(F_k, duration) per feature, zero-variance guarded.
+        d = durations - durations.mean()
+        d_norm = np.sqrt((d * d).sum())
+        Fc = F - F.mean(axis=0, keepdims=True)
+        f_norm = np.sqrt((Fc * Fc).sum(axis=0))
+        with np.errstate(invalid="ignore", divide="ignore"):
+            rho = (Fc * d[:, None]).sum(axis=0) / (f_norm * d_norm)
+        rho = np.nan_to_num(rho, nan=0.0)
+
+        with np.errstate(invalid="ignore"):
+            q = np.quantile(F, th.max_quantile, axis=0)
+
+        found: set[tuple[str, str]] = set()
+        names = self.schema.names
+        for i in np.nonzero(smask)[0]:
+            for j, spec in enumerate(self.schema):
+                if spec.kind is FeatureKind.DISCRETE:
+                    continue  # PCC treats locality as numeric-incapable; paper omits it
+                if abs(rho[j]) > th.pearson and F[i, j] > q[j]:
+                    found.add((tasks[int(i)].task_id, names[j]))
+        return found

@@ -1,0 +1,18 @@
+"""Fault tolerance: heartbeats, supervised restart, elastic re-mesh,
+BigRoots-informed straggler mitigation."""
+from .elastic import ElasticPlan, plan_mesh_shape, reshard_plan
+from .heartbeat import FailureDetector, HeartbeatWriter
+from .mitigation import MitigationAction, MitigationPlanner
+from .supervisor import RestartBudgetExceeded, Supervisor
+
+__all__ = [
+    "ElasticPlan",
+    "FailureDetector",
+    "HeartbeatWriter",
+    "MitigationAction",
+    "MitigationPlanner",
+    "RestartBudgetExceeded",
+    "Supervisor",
+    "plan_mesh_shape",
+    "reshard_plan",
+]

@@ -1,0 +1,65 @@
+"""Supervised execution: restart-from-checkpoint on failure.
+
+``Supervisor.run(body)`` calls ``body(start_step, restored_state_or_None)``
+and, on an exception or simulated node failure, restores the latest
+checkpoint and re-invokes it — up to ``max_restarts``.  ``body`` returns the
+final state when training completes.  This is the single-controller analog
+of a multi-pod job manager: crash → restore → continue, never lose more
+than one checkpoint interval.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any, Callable
+
+from ..ckpt.manager import CheckpointManager
+
+log = logging.getLogger(__name__)
+
+
+class RestartBudgetExceeded(RuntimeError):
+    pass
+
+
+class Supervisor:
+    def __init__(
+        self,
+        ckpt: CheckpointManager,
+        state_template: Any,
+        max_restarts: int = 3,
+        backoff_s: float = 0.0,
+        shardings: Any | None = None,
+    ) -> None:
+        self.ckpt = ckpt
+        self.template = state_template
+        self.max_restarts = max_restarts
+        self.backoff_s = backoff_s
+        self.shardings = shardings
+        self.restarts = 0
+        self.failures: list[str] = []
+
+    def run(self, body: Callable[[int, Any | None], Any]) -> Any:
+        while True:
+            step = self.ckpt.latest_step()
+            state = None
+            if step is not None:
+                state = self.ckpt.restore(
+                    self.template, step, shardings=self.shardings
+                )
+            start = 0 if step is None else step + 1
+            try:
+                return body(start, state)
+            except (RestartBudgetExceeded, KeyboardInterrupt):
+                raise
+            except Exception as e:  # noqa: BLE001 — supervisor boundary
+                self.restarts += 1
+                self.failures.append(f"{type(e).__name__}: {e}")
+                log.warning("supervised body failed (%s); restart %d/%d",
+                            e, self.restarts, self.max_restarts)
+                if self.restarts > self.max_restarts:
+                    raise RestartBudgetExceeded(
+                        f"{self.restarts - 1} restarts exhausted; last: {e}"
+                    ) from e
+                if self.backoff_s:
+                    time.sleep(self.backoff_s)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three layers: ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd model-layout wrappers), ``ref.py`` (pure-jnp oracles).
+Validated in interpret mode on CPU; compiled by Mosaic on TPU.
+"""
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .moe_gmm import grouped_matmul
+from .ssd_scan import ssd_intra_chunk
+
+__all__ = [
+    "decode_attention",
+    "flash_attention",
+    "grouped_matmul",
+    "ssd_intra_chunk",
+]

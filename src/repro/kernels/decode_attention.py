@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: flash-decode (split-K single-token attention).
+
+One new query token attends to a long KV cache.  The cache sequence is
+split across the innermost grid axis; each split computes partial softmax
+statistics (max, denominator, weighted-value accumulator) over its KV span
+in VMEM, and the cheap cross-split combine happens in the jitted wrapper
+(O(n_splits · D) — negligible next to the O(S · D) streaming).
+
+This is the TPU analog of GPU flash-decode: splits map to the sequential
+grid rather than SMs, and the valid-length mask comes in through SMEM.
+
+Layout: q [BH, D]; k/v [BKV, S, D]; cache_len scalar → out [BH, D].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,                     # SMEM [1, 1] int32: valid cache length
+    q_ref, k_ref, v_ref,         # [1, D], [1, Bk, D], [1, Bk, D]
+    m_ref, l_ref, acc_ref,       # outs per split: [1,1,1], [1,1,1], [1,1,D]
+    *,
+    scale: float,
+    block_k: int,
+):
+    si = pl.program_id(1)
+    q = q_ref[...]                                          # [1, D]
+    k = k_ref[0]                                            # [Bk, D]
+    v = v_ref[0]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                               # [1, Bk]
+    pos = si * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    valid = pos <= len_ref[0, 0]                            # decode token at index len
+    logits = jnp.where(valid, logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)                  # [1, 1]
+    p = jnp.exp(logits - m)
+    p = jnp.where(valid, p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    acc = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                        # [1, D]
+    m_ref[0] = m
+    l_ref[0] = l
+    acc_ref[0] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "n_rep", "interpret")
+)
+def decode_attention(
+    q: jax.Array,            # [BH, D]
+    k: jax.Array,            # [BKV, S, D]
+    v: jax.Array,            # [BKV, S, D]
+    cache_len: jax.Array,    # [] int32 — index of the current token
+    *,
+    block_k: int = 512,
+    n_rep: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, D = q.shape
+    BKV, S, _ = k.shape
+    assert BH == BKV * n_rep
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    n_s = S // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    len_arr = jnp.reshape(cache_len.astype(jnp.int32), (1, 1))
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid=(BH, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, D), lambda b, si: (b, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, si: (b // n_rep, si, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, si: (b // n_rep, si, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1, 1, D), lambda b, si: (b, si, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, n_s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BH, n_s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BH, n_s, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len_arr, q, k, v)
+
+    # cross-split combine (tiny): renormalize partial softmax statistics
+    m_star = m.max(axis=1, keepdims=True)                   # [BH, 1, 1]
+    w = jnp.exp(m - m_star)                                 # [BH, n_s, 1]
+    out = (acc * w).sum(axis=1) / jnp.maximum((l * w).sum(axis=1), 1e-30)
+    return out.astype(q.dtype)

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused causal/full GQA attention forward (flash).
+
+TPU adaptation: Q/K/V stream through VMEM in MXU-aligned blocks
+(block_q × head_dim, block_k × head_dim with 128-multiples); the online
+softmax state (running max / denominator / accumulator) lives in VMEM
+scratch and is carried across the sequential innermost grid dimension
+(TPU grids execute the last axis in order, which replaces the GPU
+warp-level loop of the original flash algorithm).
+
+Layout: q [BH, Sq, D]; k/v [BKV, Sk, D] with GQA handled by the kernel's
+index_map (query head bh reads kv head bh // n_rep — no materialized
+repeat_kv).  Output [BH, Sq, D].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,        # [1, Bq, D], [1, Bk, D], [1, Bk, D]
+    o_ref,                      # [1, Bq, D]
+    acc_ref, m_ref, l_ref,      # VMEM scratch: [Bq, D] f32, [Bq, 1] f32 ×2
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                               # [Bq, Bk]
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        logits = jnp.where(qpos >= kpos, logits, NEG_INF)
+
+    m_prev = m_ref[...]                                     # [Bq, 1]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)                             # [Bq, Bk]
+    corr = jnp.exp(m_prev - m_new)                          # [Bq, 1]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "n_rep", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,            # [BH, Sq, D]
+    k: jax.Array,            # [BKV, Sk, D]
+    v: jax.Array,            # [BKV, Sk, D]
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    n_rep: int = 1,          # BH == BKV * n_rep (GQA)
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    BKV, Sk, _ = k.shape
+    assert BH == BKV * n_rep, (BH, BKV, n_rep)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q, n_k = Sq // block_q, Sk // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b // n_rep, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b // n_rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, n_rep=1):
+    """q [BH, Sq, D]; k/v [BKV, Sk, D] → [BH, Sq, D]."""
+    BH, Sq, D = q.shape
+    k = jnp.repeat(k, n_rep, axis=0)
+    v = jnp.repeat(v, n_rep, axis=0)
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(q.dtype), v)
+
+
+def decode_attention_ref(q, k, v, cache_len, *, n_rep=1):
+    """q [BH, D]; k/v [BKV, S, D]; positions > cache_len masked."""
+    k = jnp.repeat(k, n_rep, axis=0)
+    v = jnp.repeat(v, n_rep, axis=0)
+    D = q.shape[-1]
+    S = k.shape[1]
+    logits = jnp.einsum("bd,bkd->bk", q, k).astype(jnp.float32) / math.sqrt(D)
+    valid = jnp.arange(S)[None, :] <= cache_len
+    logits = jnp.where(valid, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bk,bkd->bd", p.astype(q.dtype), v)
+
+
+def ssd_intra_chunk_ref(x, dt, A, B_, C):
+    """Chunked-layout oracle.  x [B,H,Nc,Q,P], dt [B,H,Nc,Q], A [H],
+    B_/C [B,H,Nc,Q,N] → (y_intra, state, seg) matching ssd_scan."""
+    f32 = jnp.float32
+    xf, dtf = x.astype(f32), dt.astype(f32)
+    Bf, Cf = B_.astype(f32), C.astype(f32)
+    a = dtf * A.astype(f32)[None, :, None, None]
+    seg = jnp.cumsum(a, axis=-1)                            # [B,H,Nc,Q]
+    Q = x.shape[3]
+    decay = jnp.exp(seg[..., :, None] - seg[..., None, :])  # [B,H,Nc,Q,Q]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask, decay, 0.0)
+    scores = jnp.einsum("bhcin,bhcjn->bhcij", Cf, Bf) * decay
+    scores = scores * dtf[..., None, :]
+    y = jnp.einsum("bhcij,bhcjp->bhcip", scores, xf)
+    state_decay = jnp.exp(seg[..., -1:] - seg)              # [B,H,Nc,Q]
+    xw = xf * (dtf * state_decay)[..., None]
+    s = jnp.einsum("bhcjn,bhcjp->bhcnp", Bf, xw)
+    return y.astype(x.dtype), s, seg
+
+
+def grouped_matmul_ref(x, w):
+    """x [E, Cap, d]; w [E, d, f] → [E, Cap, f]."""
+    return jnp.einsum("ecd,edf->ecf", x, w).astype(x.dtype)

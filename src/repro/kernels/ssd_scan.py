@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk dual form.
+
+The SSD hot spot is the O(Q²) intra-chunk computation (decay-masked
+attention-like matmuls) plus the chunk-state contraction — both MXU work.
+This kernel computes, per (batch, head, chunk) grid cell, entirely in VMEM:
+
+    y_intra[i]  = Σ_{j≤i} (C_i·B_j) · exp(seg_i − seg_j) · dt_j · x_j
+    S_c         = Σ_j B_j ⊗ (x_j · dt_j · exp(seg_last − seg_j))
+    seg         = cumsum(dt · A)  (emitted for the outer combine)
+
+The O(n_chunks) inter-chunk state recurrence and the y_inter term stay in
+XLA (repro.models.ssd) — they are bandwidth-trivial.  This split is the TPU
+adaptation of the paper's GPU kernel: chunk matmuls on the MXU, recurrence
+as a short scan instead of a warp-specialized pipeline.
+
+Layouts (pre-transposed by ops.py): x [B, H, Nc, Q, P], dt [B, H, Nc, Q, 1],
+B/C [B, H, Nc, Q, N], A [H] → y_intra [B,H,Nc,Q,P], state [B,H,Nc,N,P],
+seg [B,H,Nc,Q,1].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(
+    a_ref,                        # SMEM [H] f32 (per-head A)
+    x_ref, dt_ref, b_ref, c_ref,  # [1,1,1,Q,P], [1,1,1,Q,1], [1,1,1,Q,N] ×2
+    y_ref, s_ref, seg_ref,        # [1,1,1,Q,P], [1,1,1,N,P], [1,1,1,Q,1]
+    *,
+    q_len: int,
+):
+    h = pl.program_id(1)
+    x = x_ref[0, 0, 0].astype(jnp.float32)                  # [Q, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)                # [Q, 1]
+    B = b_ref[0, 0, 0].astype(jnp.float32)                  # [Q, N]
+    C = c_ref[0, 0, 0].astype(jnp.float32)                  # [Q, N]
+    A = a_ref[h]
+
+    a = dt * A                                              # [Q, 1] log-decay
+    seg = jnp.cumsum(a, axis=0)                             # [Q, 1] inclusive
+
+    # decay(j→i) = exp(seg_i - seg_j) for i ≥ j
+    li = seg                                                # [Q, 1] (i)
+    lj = seg.reshape(1, q_len)                              # [1, Q] (j)
+    decay = jnp.exp(li - lj)                                # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    decay = jnp.where(ii >= jj, decay, 0.0)
+
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # [Q, Q] C_i·B_j
+    scores = scores * decay * dt.reshape(1, q_len)           # dt_j weighting
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # [Q, P]
+
+    # chunk state: B^T @ (x · dt · decay(j → chunk end))
+    state_decay = jnp.exp(seg[q_len - 1] - seg)              # [Q, 1]
+    xw = x * (dt * state_decay)                              # [Q, P]
+    s = jax.lax.dot_general(
+        B, xw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # [N, P]
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    s_ref[0, 0, 0] = s
+    seg_ref[0, 0, 0] = seg
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(
+    x: jax.Array,    # [B, H, Nc, Q, P]
+    dt: jax.Array,   # [B, H, Nc, Q]   (post-softplus)
+    A: jax.Array,    # [H]             (negative)
+    B_: jax.Array,   # [B, H, Nc, Q, N]
+    C: jax.Array,    # [B, H, Nc, Q, N]
+    *,
+    interpret: bool = False,
+):
+    Bb, H, Nc, Q, P = x.shape
+    N = B_.shape[-1]
+    dt5 = dt[..., None]
+    kernel = functools.partial(_ssd_kernel, q_len=Q)
+
+    def spec(*dims):
+        return pl.BlockSpec(
+            (1, 1, 1) + dims, lambda b, h, c: (b, h, c, 0, 0)
+        )
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    y, s, seg = pl.pallas_call(
+        kernel,
+        grid=(Bb, H, Nc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            spec(Q, P), spec(Q, 1), spec(Q, N), spec(Q, N),
+        ],
+        out_specs=[spec(Q, P), spec(N, P), spec(Q, 1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, H, Nc, Q, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, Nc, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, H, Nc, Q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A.astype(jnp.float32), x, dt5, B_, C)
+    return y, s, seg[..., 0]

@@ -1,0 +1,253 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (DESIGN.md §7):
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``compiled.cost_analysis()`` reports the *per-device* SPMD program, so
+per-device values divided by per-chip rates equal the global formula.
+Collective bytes are not in cost_analysis: we parse the HLO text and sum
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (async -start forms counted once).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "  %x = f32[8,128]{1,0} all-reduce(%y), ..."
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+# definition lines: "  %name = <shape-or-tuple> opcode(...)" / "ROOT %name = ..."
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([^\s=]+)\s*=\s*((?:\([^)]*\)|\S+))\s")
+_OPERAND_RE = re.compile(r"%([^\s,()]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _token_bytes(token: str) -> int:
+    """Total bytes of all shapes in a shape/tuple token."""
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(token))
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int] = field(default_factory=dict)
+    count_by_kind: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+# Ops that genuinely stream HBM on TPU (elementwise chains fuse into their
+# producers/consumers; XLA-CPU's "bytes accessed" counts every op and is kept
+# as the upper bound).  Collectives are accounted separately.
+_HBM_OPS = (
+    "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort",
+    "concatenate", "pad", "copy", "cholesky", "triangular-solve",
+)
+_HBM_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_HBM_OPS) + r")\("
+)
+
+
+def hbm_bytes_estimate(hlo_text: str) -> int:
+    """TPU-fusion-approximate HBM traffic: Σ operand+result bytes over
+    data-moving ops only.  A lower-variance estimate than XLA-CPU
+    bytes-accessed (which counts unfused elementwise I/O); still an
+    approximation — see EXPERIMENTS.md §Roofline methodology."""
+    table: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            table[m.group(1)] = _token_bytes(m.group(2))
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _HBM_RE.search(line)
+        if not m:
+            continue
+        dm = _DEF_RE.match(line)
+        result = _token_bytes(dm.group(2)) if dm else 0
+        args = line[m.end():]
+        depth, end = 1, len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = sum(
+            table.get(name, 0) for name in _OPERAND_RE.findall(args[:end])
+        )
+        total += result + operands
+    return total
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device collective *operand* bytes, by collective kind.
+
+    HLO text prints operands as bare ``%name`` references, so a first pass
+    builds a name → shape-bytes symbol table from definition lines; the
+    second pass resolves each collective's operands against it (falling back
+    to the result shape when an operand is unresolvable, e.g. inlined
+    constants)."""
+    table: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            table[m.group(1)] = _token_bytes(m.group(2))
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:      # async pair: count the -start only
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand list: balanced-paren slice after the opcode
+        args = line[m.end():]
+        depth = 1
+        end = len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_text = args[:end]
+        nbytes = sum(
+            table.get(name, 0) for name in _OPERAND_RE.findall(operand_text)
+        )
+        if nbytes == 0:
+            # fall back: inline shapes in the operand text, else result shape
+            nbytes = _token_bytes(operand_text)
+        if nbytes == 0:
+            dm = _DEF_RE.match(line)
+            nbytes = _token_bytes(dm.group(2)) if dm else 0
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float               # TPU-fusion-approx HBM traffic
+    bytes_upper_bound_per_device: float   # raw XLA-CPU bytes accessed
+    collective_bytes_per_device: float
+    chips: int
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    memory_upper_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+
+    @staticmethod
+    def build(flops: float, bytes_: float, coll_bytes: float, chips: int,
+              model_flops: float, bytes_upper: float | None = None) -> "Roofline":
+        r = Roofline(
+            flops_per_device=flops,
+            bytes_per_device=bytes_,
+            bytes_upper_bound_per_device=(
+                bytes_upper if bytes_upper is not None else bytes_
+            ),
+            collective_bytes_per_device=coll_bytes,
+            chips=chips,
+            model_flops=model_flops,
+        )
+        r.compute_s = flops / PEAK_FLOPS
+        r.memory_s = bytes_ / HBM_BW
+        r.memory_upper_s = r.bytes_upper_bound_per_device / HBM_BW
+        r.collective_s = coll_bytes / LINK_BW
+        terms = {
+            "compute": r.compute_s,
+            "memory": r.memory_s,
+            "collective": r.collective_s,
+        }
+        r.dominant = max(terms, key=terms.get)
+        global_flops = flops * chips
+        r.useful_ratio = model_flops / global_flops if global_flops else 0.0
+        return r
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / max(all terms): 1.0 = the step is compute-bound at
+        peak; lower = the dominant non-compute term caps MFU at this value."""
+        b = self.bound_s
+        return self.compute_s / b if b else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "bytes_upper_bound_per_device": self.bytes_upper_bound_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_upper_s": self.memory_upper_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape, active_only_for_moe: bool = True) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode),
+    N = active params for MoE."""
+    n = cfg.param_count(active_only=active_only_for_moe and cfg.moe_experts > 0)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,86 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+Weak-type-correct, shardable, zero allocation — what the dry-run lowers
+against.  Shapes follow DESIGN.md §4: VLM cells split seq into 1024 patch
+embeddings + text; enc-dec cells use T_enc = seq_len/4 frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ShapeSpec
+from ..models.config import ModelConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.enc_layers:                       # enc-dec: frames + decoder tokens
+        t_enc = max(S // 4, 1)
+        return {
+            "tokens": sds((B, S), I32),
+            "labels": sds((B, S), I32),
+            "enc_embeds": sds((B, t_enc, cfg.d_model), F32),
+        }
+    if cfg.frontend_tokens:                  # VLM: patches + text
+        text = S - cfg.frontend_tokens
+        assert text > 0, f"{cfg.name}: seq {S} too short for frontend"
+        return {
+            "tokens": sds((B, text), I32),
+            "labels": sds((B, text), I32),
+            "embeds": sds((B, cfg.frontend_tokens, cfg.d_model), F32),
+        }
+    return {"tokens": sds((B, S), I32), "labels": sds((B, S), I32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend_tokens:
+        return {
+            "tokens": sds((B, S - cfg.frontend_tokens), I32),
+            "embeds": sds((B, cfg.frontend_tokens, cfg.d_model), F32),
+        }
+    return {"tokens": sds((B, S), I32)}
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeSpec):
+    return sds((shape.global_batch, 1), I32)
+
+
+def abstract_cache(model, cfg: ModelConfig, shape: ShapeSpec):
+    """Decode cache stand-in (eval_shape over init_cache — no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.enc_layers:
+        t_enc = max(S // 4, 1)
+        enc = sds((B, t_enc, cfg.d_model), F32)
+        return jax.eval_shape(
+            lambda p, e: model.init_cache(p, {"enc_embeds": e}, S),
+            model.abstract_params(), enc,
+        )
+    from ..models import lm
+
+    return jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+
+
+def input_specs(model, cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """All abstract inputs for the cell's step function."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {
+            "batch": prefill_batch_specs(cfg, shape),
+            "cache": abstract_cache(model, cfg, shape),
+        }
+    if shape.kind == "decode":
+        return {
+            "tokens": decode_token_specs(cfg, shape),
+            "cache": abstract_cache(model, cfg, shape),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,5 @@
+"""Model zoo: configs, layers and assemblies for the 10 assigned archs."""
+from .api import Model
+from .config import LayerSlot, ModelConfig, smoke_variant
+
+__all__ = ["LayerSlot", "Model", "ModelConfig", "smoke_variant"]

@@ -1,0 +1,71 @@
+"""Family-dispatching model API: one call surface for all 10 architectures.
+
+    model = Model(cfg)
+    params = model.init(rng)
+    loss, metrics = model.loss(params, batch)
+    cache = model.init_cache(params, batch, max_len)
+    logits, cache = model.prefill(params, batch, cache)
+    logits, cache = model.decode(params, tokens, cache)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg.validate()
+        self.is_encdec = cfg.enc_layers > 0
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> Params:
+        mod = encdec if self.is_encdec else lm
+        return mod.init_params(key, self.cfg)
+
+    def abstract_params(self) -> Params:
+        mod = encdec if self.is_encdec else lm
+        return jax.eval_shape(lambda k: mod.init_params(k, self.cfg), jax.random.key(0))
+
+    # -- training -------------------------------------------------------------
+    def loss(self, params: Params, batch: dict):
+        if self.is_encdec:
+            return encdec.loss_fn(params, self.cfg, batch)
+        return lm.loss_fn(params, self.cfg, batch)
+
+    def forward(self, params: Params, batch: dict):
+        if self.is_encdec:
+            return encdec.forward(params, self.cfg, batch["tokens"], batch["enc_embeds"])
+        return lm.forward(params, self.cfg, batch["tokens"], embeds=batch.get("embeds"))
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, params: Params, batch: dict, max_len: int) -> dict:
+        if self.is_encdec:
+            return encdec.init_cache(params, self.cfg, batch["enc_embeds"], max_len)
+        bsz = batch["tokens"].shape[0]
+        return lm.init_cache(self.cfg, bsz, max_len)
+
+    def prefill(self, params: Params, batch: dict, cache: dict):
+        if self.is_encdec:
+            # encoder output is already in the cache (init_cache encodes);
+            # prefill = teacher-forced decoder prompt into the self cache.
+            return encdec.prefill(params, self.cfg, batch["tokens"], cache)
+        return lm.prefill(
+            params, self.cfg, batch["tokens"], cache, embeds=batch.get("embeds")
+        )
+
+    def decode(self, params: Params, tokens, cache: dict):
+        if self.is_encdec:
+            return encdec.decode_step(params, self.cfg, tokens, cache)
+        return lm.decode_step(params, self.cfg, tokens, cache)
+
+    # -- bookkeeping ----------------------------------------------------------
+    def param_count(self, active_only: bool = False) -> int:
+        return self.cfg.param_count(active_only=active_only)

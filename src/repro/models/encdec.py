@@ -1,0 +1,278 @@
+"""Encoder-decoder assembly (seamless-m4t backbone).
+
+The audio frontend is a STUB per the brief: the encoder consumes precomputed
+frame embeddings [B, T_enc, d] supplied by ``input_specs()``.  Encoder layers
+are bidirectional self-attention + MLP; decoder layers are causal
+self-attention + cross-attention + MLP, all sharing the GQA geometry of the
+config.  Serving: ``encode`` once, then prefill/decode the decoder with a
+self-attention KV cache and a static cross-attention cache built from the
+encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    _project_qkv,
+    _repeat_kv,
+    attention_apply,
+    attention_decode,
+    attention_init,
+    blocked_attention,
+    dense_attention,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    rope,
+)
+from .moe import MoeAux
+
+Params = dict[str, Any]
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    pdtype = jnp.dtype(cfg.param_dtype)
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_padded, cfg.d_model))
+                  * 0.02).astype(pdtype),
+        "head": (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_padded))
+                 * 0.02).astype(pdtype),
+        "enc_final_norm": rmsnorm_init(cfg.d_model, pdtype),
+        "final_norm": rmsnorm_init(cfg.d_model, pdtype),
+    }
+
+    def stack(init_fn, key, n):
+        return jax.vmap(init_fn)(jax.random.split(key, n))
+
+    params["enc_blocks"] = {
+        "attn": stack(lambda k: attention_init(k, cfg), keys[2], cfg.enc_layers),
+        "mlp": stack(lambda k: mlp_init(k, cfg), keys[3], cfg.enc_layers),
+    }
+    params["dec_blocks"] = {
+        "self_attn": stack(lambda k: attention_init(k, cfg), keys[4], cfg.n_layers),
+        "cross_attn": stack(lambda k: attention_init(k, cfg), keys[5], cfg.n_layers),
+        "mlp": stack(lambda k: mlp_init(k, cfg), keys[6], cfg.n_layers),
+    }
+    return params
+
+
+def encode(params: Params, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, bp):
+        h = rmsnorm(x, bp["attn"]["norm_scale"], cfg.norm_eps)
+        x = x + attention_apply(bp["attn"], h, cfg, positions=positions, causal=False)
+        h = rmsnorm(x, bp["mlp"]["norm_scale"], cfg.norm_eps)
+        x = x + mlp_apply(bp["mlp"], h)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    if cfg.scan_blocks:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.enc_layers):
+            bp = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+            x, _ = body(x, bp)
+    return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,             # [B, S_dec]
+    enc_embeds: jax.Array,         # [B, T_enc, d] (frontend stub output)
+) -> tuple[jax.Array, MoeAux]:
+    enc_out = encode(params, cfg, enc_embeds)
+    cdt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None], (B, enc_out.shape[1])
+    )
+
+    def body(x, bp):
+        h = rmsnorm(x, bp["self_attn"]["norm_scale"], cfg.norm_eps)
+        x = x + attention_apply(bp["self_attn"], h, cfg, positions=positions)
+        h = rmsnorm(x, bp["cross_attn"]["norm_scale"], cfg.norm_eps)
+        x = x + attention_apply(
+            bp["cross_attn"], h, cfg, positions=positions, causal=False,
+            x_kv=enc_out, kv_positions=enc_pos, use_rope=False,
+        )
+        h = rmsnorm(x, bp["mlp"]["norm_scale"], cfg.norm_eps)
+        x = x + mlp_apply(bp["mlp"], h)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    if cfg.scan_blocks:
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+            x, _ = body(x, bp)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    from .lm import head_logits
+
+    logits = head_logits(params, cfg, x)
+    aux = MoeAux(jnp.float32(0.0), jnp.float32(0.0), jnp.zeros((1,), jnp.float32))
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    from .lm import cross_entropy
+
+    logits, _ = forward(params, cfg, batch["tokens"], batch["enc_embeds"])
+    labels = batch["labels"]
+    valid = labels >= 0
+    nll = cross_entropy(logits, jnp.maximum(labels, 0))
+    ce = jnp.where(valid, nll, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+    return ce, {"loss": ce, "ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_cache(
+    params: Params, cfg: ModelConfig, enc_embeds: jax.Array, max_len: int
+) -> dict:
+    """Encode + precompute cross K/V; allocate the decoder self cache."""
+    enc_out = encode(params, cfg, enc_embeds)
+    B, T_enc = enc_out.shape[:2]
+    cdt = jnp.dtype(cfg.dtype)
+
+    def cross_kv(bp):
+        _, k, v = _project_qkv(bp, enc_out, enc_out, cfg)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(cross_kv)(params["dec_blocks"]["cross_attn"])
+    kv_shape = (cfg.n_layers, B, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "len": jnp.zeros((), jnp.int32),
+        "self": {"k": jnp.zeros(kv_shape, cdt), "v": jnp.zeros(kv_shape, cdt)},
+        "cross": cross,
+    }
+
+
+def _cross_attend(p, h, cfg, k, v):
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    cdt = h.dtype
+    B, S = h.shape[:2]
+    q = (h @ p["wq"].astype(cdt)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    out = dense_attention(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep), causal=False)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(cdt)
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """Teacher-forced decoder prompt processing: fills the self-attention
+    cache against the (already encoded) cross cache.  Returns last-position
+    logits + updated cache."""
+    cdt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(cdt)[tokens]          # [B, S, d]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    max_len = cache["self"]["k"].shape[2]
+
+    def body(x, inputs):
+        bp, cross_c = inputs
+        h = rmsnorm(x, bp["self_attn"]["norm_scale"], cfg.norm_eps)
+        q, k, v = _project_qkv(bp["self_attn"], h, h, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+        kk, vv = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+        if cfg.attention_impl == "dense":
+            out = dense_attention(q, kk, vv, causal=True)
+        else:
+            out = blocked_attention(q, kk, vv, causal=True,
+                                    unroll=cfg.attention_unroll)
+        out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        x = x + out @ bp["self_attn"]["wo"].astype(out.dtype)
+        h = rmsnorm(x, bp["cross_attn"]["norm_scale"], cfg.norm_eps)
+        x = x + _cross_attend(bp["cross_attn"], h, cfg, cross_c["k"], cross_c["v"])
+        h = rmsnorm(x, bp["mlp"]["norm_scale"], cfg.norm_eps)
+        x = x + mlp_apply(bp["mlp"], h)
+        pad = max_len - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, {"k": kc, "v": vc}
+
+    if cfg.scan_blocks:
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["cross"])
+        )
+    else:
+        per_layer = []
+        for i in range(cfg.n_layers):
+            inputs = jax.tree.map(
+                lambda a: a[i], (params["dec_blocks"], cache["cross"])
+            )
+            x, ys = body(x, inputs)
+            per_layer.append(ys)
+        new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    from .lm import head_logits
+
+    logits = head_logits(params, cfg, x[:, -1:, :])
+    return logits, {
+        "len": jnp.full((), S, jnp.int32),
+        "self": new_self,
+        "cross": cache["cross"],
+    }
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    cdt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(cdt)[tokens]        # [B, 1, d]
+    cache_len = cache["len"]
+
+    def body(x, inputs):
+        bp, self_c, cross_c = inputs
+        h = rmsnorm(x, bp["self_attn"]["norm_scale"], cfg.norm_eps)
+        out, kc, vc = attention_decode(
+            bp["self_attn"], h, cfg, self_c["k"], self_c["v"], cache_len
+        )
+        x = x + out
+        h = rmsnorm(x, bp["cross_attn"]["norm_scale"], cfg.norm_eps)
+        x = x + _cross_attend(bp["cross_attn"], h, cfg, cross_c["k"], cross_c["v"])
+        h = rmsnorm(x, bp["mlp"]["norm_scale"], cfg.norm_eps)
+        x = x + mlp_apply(bp["mlp"], h)
+        return x, {"k": kc, "v": vc}
+
+    if cfg.scan_blocks:
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["self"], cache["cross"])
+        )
+    else:
+        per_layer = []
+        for i in range(cfg.n_layers):
+            inputs = jax.tree.map(
+                lambda a: a[i],
+                (params["dec_blocks"], cache["self"], cache["cross"]),
+            )
+            x, ys = body(x, inputs)
+            per_layer.append(ys)
+        new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    from .lm import head_logits
+
+    logits = head_logits(params, cfg, x)
+    return logits, {"len": cache_len + 1, "self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,257 @@
+"""Shared model layers: RMSNorm, RoPE, GQA attention (dense / blocked /
+decode), SwiGLU MLP.  Pure JAX init/apply pairs over plain dict pytrees —
+no framework — so sharding rules can be assigned by parameter path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def _init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Apply RoPE. x: [B, S, H, D]; positions: [B, S] (absolute indices)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def attention_init(key, cfg, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pdtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "norm_scale": rmsnorm_init(d, pdtype),
+        "wq": _init(ks[0], (d, h * hd), dtype=pdtype),
+        "wk": _init(ks[1], (d, kv * hd), dtype=pdtype),
+        "wv": _init(ks[2], (d, kv * hd), dtype=pdtype),
+        "wo": _init(ks[3], (h * hd, d), scale=0.02 / math.sqrt(2 * cfg.n_layers), dtype=pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), pdtype)
+        p["bk"] = jnp.zeros((kv * hd,), pdtype)
+        p["bv"] = jnp.zeros((kv * hd,), pdtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, x_kv: jax.Array, cfg):
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = jnp.dtype(cfg.dtype)
+    q = (x @ p["wq"].astype(cdt))
+    k = (x_kv @ p["wk"].astype(cdt))
+    v = (x_kv @ p["wv"].astype(cdt))
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    B, S = x.shape[0], x.shape[1]
+    Skv = x_kv.shape[1]
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, Skv, kv, hd)
+    v = v.reshape(B, Skv, kv, hd)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    B, S, kv, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (B, S, kv, n_rep, hd)
+    ).reshape(B, S, kv * n_rep, hd)
+
+
+def dense_attention(q, k, v, causal: bool, q_offset: int | jax.Array = 0):
+    """Reference O(S²) attention. q: [B,Sq,H,D], k/v: [B,Sk,H,D]."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def blocked_attention(
+    q, k, v, causal: bool, kv_chunk: int = 1024,
+    q_offset: int | jax.Array = 0, unroll: bool = False,
+):
+    """Flash-style attention in pure XLA: scan over KV chunks with an online
+    softmax (running max / denominator).  Never materializes the S×S score
+    matrix, so compile-time memory analysis reflects what a fused TPU kernel
+    would use.  Numerically ≡ dense_attention (same fp32 softmax).
+
+    ``unroll=True`` replaces the scan with a python loop — used by the
+    dry-run's cost-extraction variants (XLA cost analysis counts while
+    bodies once)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if Sk % kv_chunk:
+        kv_chunk = math.gcd(Sk, kv_chunk) or Sk
+    n_chunks = Sk // kv_chunk
+    scale = 1.0 / math.sqrt(D)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq)[:, None] + q_offset  # [Sq, 1]
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        idx, kb, vb = inputs
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        if causal:
+            kpos = idx * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = qpos >= kpos  # [Sq, kv_chunk]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    if unroll:
+        carry = (m0, l0, acc0)
+        for i in range(n_chunks):
+            carry, _ = step(carry, (jnp.int32(i), kc[i], vc[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc)
+        )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B, Sq, H, D]
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    x_kv: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill without cache)."""
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(p, x, x_kv, cfg)
+    if use_rope:
+        kv_pos = positions if kv_positions is None else kv_positions
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_pos, cfg.rope_theta)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    if cfg.attention_impl == "dense":
+        out = dense_attention(q, k, v, causal)
+    else:
+        out = blocked_attention(q, k, v, causal, unroll=cfg.attention_unroll)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(out.dtype)
+
+
+def attention_decode(
+    p: Params,
+    x: jax.Array,                   # [B, 1, d]
+    cfg,
+    k_cache: jax.Array,             # [B, S_max, kv, hd]
+    v_cache: jax.Array,
+    cache_len: jax.Array,           # [] int32 — current fill level
+    *,
+    use_rope: bool = True,
+    update_cache: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode against a KV cache. Returns (out, k_cache, v_cache)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, x, cfg)          # q: [B,1,H,hd], k/v: [B,1,kv,hd]
+    if use_rope:
+        pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    if update_cache:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, cache_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, cache_len, axis=1)
+    S_max = k_cache.shape[1]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kk = _repeat_kv(k_cache, n_rep)
+    vv = _repeat_kv(v_cache, n_rep)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    valid = jnp.arange(S_max)[None, None, None, :] <= cache_len
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(out.dtype), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    pdtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "norm_scale": rmsnorm_init(d, pdtype),
+        "w_gate": _init(ks[0], (d, ff), dtype=pdtype),
+        "w_up": _init(ks[1], (d, ff), dtype=pdtype),
+        "w_down": _init(ks[2], (ff, d), scale=0.02 / math.sqrt(2 * cfg.n_layers), dtype=pdtype),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    cdt = x.dtype
+    g = x @ p["w_gate"].astype(cdt)
+    u = x @ p["w_up"].astype(cdt)
+    return (jax.nn.silu(g) * u) @ p["w_down"].astype(cdt)

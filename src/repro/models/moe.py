@@ -1,0 +1,144 @@
+"""Mixture-of-Experts layer: top-k router + expert FFNs.
+
+Two execution paths, selectable by ``cfg.moe_impl``:
+
+- ``ragged`` (default): token-sorted grouped matmul via ``jax.lax.ragged_dot``
+  — computes only the active k experts per token, so HLO FLOPs ≈ active
+  FLOPs (the honest roofline).  This is the XLA analog of the Pallas
+  ``moe_gmm`` kernel (same token-sort layout).
+- ``dense``: every expert processes every token, combined by routing weight.
+  Simple, sharding-friendly, but inflates compute by E/k — kept as a
+  fallback and as the baseline the §Perf log starts from.
+
+Returns (output, aux) where aux carries the load-balancing and router-z
+losses plus the expert load vector (the MoE skew telemetry BigRoots maps to
+``shuffle_read_bytes`` — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, rmsnorm_init
+
+Params = dict[str, Any]
+
+
+class MoeAux(NamedTuple):
+    load_balance_loss: jax.Array   # scalar
+    router_z_loss: jax.Array       # scalar
+    expert_load: jax.Array         # [E] fraction of routed (token, k) slots
+
+
+def moe_init(key, cfg) -> Params:
+    E, d, ffe = cfg.moe_experts, cfg.d_model, cfg.expert_d_ff
+    pdtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm_scale": rmsnorm_init(d, pdtype),
+        "router": _init(ks[0], (d, E), dtype=pdtype),
+        "w_gate": _init(ks[1], (E, d, ffe), dtype=pdtype),
+        "w_up": _init(ks[2], (E, d, ffe), dtype=pdtype),
+        "w_down": _init(ks[3], (E, ffe, d), dtype=pdtype),
+    }
+
+
+def _route(p: Params, x2d: jax.Array, cfg):
+    """Router: top-k expert ids + renormalized weights. x2d: [T, d]."""
+    logits = (x2d @ p["router"].astype(x2d.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.moe_top_k)  # [T, k]
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # Aux losses (Switch/GShard style).
+    E = cfg.moe_experts
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.float32)       # [T, k, E]
+    load = onehot.sum(axis=(0, 1)) / jnp.maximum(onehot.sum(), 1.0)  # [E]
+    importance = probs.mean(axis=0)                              # [E]
+    lb = E * jnp.sum(load * importance)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return experts, weights, MoeAux(lb, z, load)
+
+
+def _ragged_ffn(p: Params, xs: jax.Array, group_sizes: jax.Array, cdt) -> jax.Array:
+    g = jax.lax.ragged_dot(xs, p["w_gate"].astype(cdt), group_sizes)
+    u = jax.lax.ragged_dot(xs, p["w_up"].astype(cdt), group_sizes)
+    h = jax.nn.silu(g) * u
+    return jax.lax.ragged_dot(h, p["w_down"].astype(cdt), group_sizes)
+
+
+def moe_apply_ragged(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, MoeAux]:
+    """Token-sorted ragged-GEMM MoE. x: [B, S, d] (or [T, d])."""
+    shape = x.shape
+    d = shape[-1]
+    x2d = x.reshape(-1, d)
+    T = x2d.shape[0]
+    k = cfg.moe_top_k
+    experts, weights, aux = _route(p, x2d, cfg)
+
+    flat_expert = experts.reshape(T * k)
+    order = jnp.argsort(flat_expert)                       # stable
+    token_idx = jnp.repeat(jnp.arange(T), k)[order]        # source token per slot
+    xs = x2d[token_idx]                                    # [T*k, d] sorted by expert
+    group_sizes = jnp.bincount(flat_expert, length=cfg.moe_experts)
+
+    ys = _ragged_ffn(p, xs, group_sizes, x.dtype)          # [T*k, d]
+
+    inv = jnp.argsort(order)
+    ys = ys[inv].reshape(T, k, d)
+    out = jnp.einsum("tkd,tk->td", ys, weights.astype(x.dtype))
+    return out.reshape(shape), aux
+
+
+def moe_apply_dense(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, MoeAux]:
+    """All-experts dense MoE (E/k FLOPs inflation; sharding-trivial)."""
+    shape = x.shape
+    d = shape[-1]
+    x2d = x.reshape(-1, d)
+    T = x2d.shape[0]
+    experts, weights, aux = _route(p, x2d, cfg)
+    cdt = x.dtype
+    # combine weights scattered into a [T, E] matrix
+    comb = jnp.zeros((T, cfg.moe_experts), jnp.float32)
+    comb = comb.at[jnp.arange(T)[:, None], experts].add(weights)
+    g = jnp.einsum("td,edf->tef", x2d, p["w_gate"].astype(cdt))
+    u = jnp.einsum("td,edf->tef", x2d, p["w_up"].astype(cdt))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tef,efd->ted", h, p["w_down"].astype(cdt))
+    out = jnp.einsum("ted,te->td", y, comb.astype(cdt))
+    return out.reshape(shape), aux
+
+
+def moe_apply_gathered(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, MoeAux]:
+    """Tiny-batch decode path: gather only the top-k experts' weights
+    (T·k ≪ E).  HBM traffic = k expert slices instead of streaming all E —
+    the honest cost for single-sequence long-context decode."""
+    shape = x.shape
+    d = shape[-1]
+    x2d = x.reshape(-1, d)
+    T = x2d.shape[0]
+    experts, weights, aux = _route(p, x2d, cfg)     # [T, k]
+    cdt = x.dtype
+    wg = p["w_gate"].astype(cdt)[experts]           # [T, k, d, f]
+    wu = p["w_up"].astype(cdt)[experts]
+    wd = p["w_down"].astype(cdt)[experts]           # [T, k, f, d]
+    g = jnp.einsum("td,tkdf->tkf", x2d, wg)
+    u = jnp.einsum("td,tkdf->tkf", x2d, wu)
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tkf,tkfd->tkd", h, wd)
+    out = jnp.einsum("tkd,tk->td", y, weights.astype(cdt))
+    return out.reshape(shape), aux
+
+
+def moe_apply(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, MoeAux]:
+    if cfg.moe_impl == "dense":
+        return moe_apply_dense(p, x, cfg)
+    if cfg.moe_impl == "gathered":
+        return moe_apply_gathered(p, x, cfg)
+    if cfg.moe_impl == "ep":
+        from ..parallel.ep_moe import ep_moe_apply
+
+        return ep_moe_apply(p, x, cfg)
+    return moe_apply_ragged(p, x, cfg)

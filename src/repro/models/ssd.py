@@ -1,0 +1,296 @@
+"""Mamba2 mixer: state-space duality (SSD) layer [arXiv:2405.21060].
+
+Training/prefill uses the *chunked dual form*: within a chunk of Q tokens the
+recurrence is evaluated as a masked-decay attention-like matmul (MXU-friendly
+— this is the TPU adaptation of the paper's GPU kernel), and chunk-boundary
+states are carried by a short ``lax.scan``.  Decode is the O(1) recurrent
+step.  ``repro.kernels.ssd_scan`` is the Pallas version of the intra-chunk
+compute; this module is its jnp oracle and the XLA execution path.
+
+Shapes: x [B,S,H,P] (H = d_inner/P SSD heads), dt [B,S,H], A [H] (negative),
+B/C [B,S,G,N] with G groups broadcast over heads.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, rmsnorm, rmsnorm_init
+
+Params = dict[str, Any]
+
+
+class SsmState(NamedTuple):
+    conv_x: jax.Array   # [B, K-1, d_inner] shift register (x channels)
+    conv_bc: jax.Array  # [B, K-1, 2·G·N] shift register (B|C channels)
+    ssm: jax.Array      # [B, H, P, N]
+
+
+def ssm_init(key, cfg) -> Params:
+    """Mamba2 mixer parameters.
+
+    TPU-sharding adaptation (DESIGN.md §5): the reference implementation fuses
+    in_proj into one [d, 2·d_inner+2·G·N+H] matmul and runs one depthwise conv
+    over the concatenated [x|B|C] channels.  Under 16-way tensor parallelism
+    the concatenated dim's component boundaries do not align with shard
+    boundaries, so we split the projection into per-component weights (wz, wx
+    shardable over d_inner; wbc, wdt small → replicated) and use separate
+    depthwise convs for x and B|C — the same function class, shard-friendly.
+    """
+    d = cfg.d_model
+    pdtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    H = cfg.ssm_heads
+    gn2 = 2 * cfg.ssm_groups * cfg.ssm_state
+    # dt bias initialized so softplus(dt_bias) spans ~[1e-3, 1e-1] (mamba2 default)
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (H,)) * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "norm_scale": rmsnorm_init(d, pdtype),
+        "wz": _init(ks[0], (d, cfg.d_inner), dtype=pdtype),
+        "wx": _init(ks[1], (d, cfg.d_inner), dtype=pdtype),
+        "wbc": _init(ks[4], (d, gn2), dtype=pdtype),
+        "wdt": _init(ks[5], (d, H), dtype=pdtype),
+        "conv_x_w": _init(ks[6], (cfg.ssm_conv, cfg.d_inner), scale=0.1, dtype=pdtype),
+        "conv_x_b": jnp.zeros((cfg.d_inner,), pdtype),
+        "conv_bc_w": _init(ks[7], (cfg.ssm_conv, gn2), scale=0.1, dtype=pdtype),
+        "conv_bc_b": jnp.zeros((gn2,), pdtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), pdtype),
+        "dt_bias": dt_bias.astype(pdtype),
+        "inner_norm": rmsnorm_init(cfg.d_inner, pdtype),
+        "out_proj": _init(ks[3], (cfg.d_inner, d), dtype=pdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  prepend: jax.Array | None = None) -> jax.Array:
+    """x: [B, S, C]; w: [K, C]; causal (left) padding or supplied state."""
+    K = w.shape[0]
+    if prepend is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prepend.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # [B, S+K-1, C]
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(K)
+    )
+    return out + b[None, None, :].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (dual form)
+# ---------------------------------------------------------------------------
+def ssd_chunked(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]  (post-softplus, positive)
+    A: jax.Array,      # [H]        (negative)
+    Bm: jax.Array,     # [B, S, G, N]
+    Cm: jax.Array,     # [B, S, G, N]
+    chunk: int,
+    h0: jax.Array | None = None,   # [B, H, P, N] initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"seq len {S} not divisible by chunk {Q}")
+    Nc = S // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(B_, Nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(B_, Nc, Q, H).astype(f32)
+    Bc = jnp.repeat(Bm.reshape(B_, Nc, Q, G, N), rep, axis=3).astype(f32)  # [B,Nc,Q,H,N]
+    Cc = jnp.repeat(Cm.reshape(B_, Nc, Q, G, N), rep, axis=3).astype(f32)
+
+    a = dtc * A.astype(f32)[None, None, None, :]          # [B,Nc,Q,H] log-decay
+    seg = jnp.cumsum(a, axis=2)                            # inclusive cumsum
+
+    # --- intra-chunk (dual/attention form) ---
+    # decay(i←j) = exp(seg_i - seg_j), valid for i >= j
+    li = seg[:, :, :, None, :]                             # [B,Nc,Q,1,H] (i)
+    lj = seg[:, :, None, :, :]                             # [B,Nc,1,Q,H] (j)
+    decay = jnp.exp(li - lj)                               # [B,Nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    decay = jnp.where(mask, decay, 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc) * decay
+    scores = scores * dtc[:, :, None, :, :]                # dt_j weighting
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # --- per-chunk boundary states ---
+    chunk_sum = seg[:, :, -1, :]                           # [B,Nc,H]
+    state_decay = jnp.exp(chunk_sum[:, :, None, :] - seg)  # decay(j → chunk end)
+    weighted = xc * (dtc * state_decay)[..., None]         # [B,Nc,Q,H,P]
+    S_c = jnp.einsum("bcjhn,bcjhp->bchpn", Bc, weighted)   # [B,Nc,H,P,N]
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    h_init = (
+        jnp.zeros((B_, H, P, N), f32) if h0 is None else h0.astype(f32)
+    )
+    chunk_decay = jnp.exp(chunk_sum)                       # [B,Nc,H]
+
+    def step(h, inputs):
+        dec, s_c = inputs                                  # [B,H], [B,H,P,N]
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h                                    # emit state BEFORE chunk
+
+    h_final, h_before = jax.lax.scan(
+        step,
+        h_init,
+        (chunk_decay.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)           # [B,Nc,H,P,N]
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(seg)                                # decay(chunk start → i)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Cc * in_decay[..., None], h_before)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_reference(x, dt, A, Bm, Cm, h0=None):
+    """O(S) sequential-scan oracle for ssd_chunked (tests)."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(f32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(f32)
+    a = (dt.astype(f32) * A.astype(f32)[None, None, :])
+
+    def step(h, t):
+        xt, dtt, at, Bt, Ct = t
+        h = h * jnp.exp(at)[:, :, None, None] + (
+            dtt[:, :, None, None] * xt[..., None] * Bt[:, :, None, :]
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h = jnp.zeros((B_, H, P, N), f32) if h0 is None else h0.astype(f32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(f32),
+        dt.transpose(1, 0, 2).astype(f32),
+        a.transpose(1, 0, 2),
+        Bh.transpose(1, 0, 2, 3),
+        Ch.transpose(1, 0, 2, 3),
+    )
+    h_final, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# layer apply: full-sequence (train / prefill) and one-token decode
+# ---------------------------------------------------------------------------
+def _project(p: Params, x: jax.Array, cdt):
+    z = x @ p["wz"].astype(cdt)
+    xr = x @ p["wx"].astype(cdt)
+    bc = x @ p["wbc"].astype(cdt)
+    dt = x @ p["wdt"].astype(cdt)
+    return z, xr, bc, dt
+
+
+def ssm_apply(
+    p: Params,
+    x: jax.Array,          # [B, S, d]
+    cfg,
+    state: SsmState | None = None,
+    return_state: bool = False,
+):
+    B, S, d = x.shape
+    cdt = x.dtype
+    z, xr, bc, dt = _project(p, x, cdt)
+    xc = jax.nn.silu(
+        causal_conv1d(xr, p["conv_x_w"], p["conv_x_b"],
+                      prepend=state.conv_x if state is not None else None)
+    )
+    bcc = jax.nn.silu(
+        causal_conv1d(bc, p["conv_bc_w"], p["conv_bc_b"],
+                      prepend=state.conv_bc if state is not None else None)
+    )
+    di, gn = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+    xs = xc.reshape(B, S, cfg.ssm_heads, cfg.ssm_head_dim)
+    Bm = bcc[..., :gn].reshape(B, S, cfg.ssm_groups, cfg.ssm_state)
+    Cm = bcc[..., gn:].reshape(B, S, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, h_final = ssd_chunked(
+        xs, dt, A, Bm, Cm, cfg.ssm_chunk,
+        h0=state.ssm if state is not None else None,
+    )
+    y = y + p["D"].astype(cdt)[None, None, :, None] * xs
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["inner_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(cdt)
+    if return_state:
+        K = cfg.ssm_conv
+
+        def shift_reg(prev: jax.Array | None, cur: jax.Array) -> jax.Array:
+            if prev is None:
+                prev = jnp.zeros((B, K - 1, cur.shape[-1]), cdt)
+            full = jnp.concatenate([prev.astype(cdt), cur], axis=1)
+            return full[:, -(K - 1):, :]
+
+        new_state = SsmState(
+            conv_x=shift_reg(state.conv_x if state is not None else None, xr),
+            conv_bc=shift_reg(state.conv_bc if state is not None else None, bc),
+            ssm=h_final,
+        )
+        return out, new_state
+    return out
+
+
+def ssm_decode(
+    p: Params,
+    x: jax.Array,          # [B, 1, d]
+    cfg,
+    state: SsmState,
+) -> tuple[jax.Array, SsmState]:
+    B = x.shape[0]
+    cdt = x.dtype
+    z, xr, bc, dt = _project(p, x, cdt)           # [B,1,*]
+    # convs via shift registers (raw pre-activation windows)
+    win_x = jnp.concatenate([state.conv_x.astype(cdt), xr], axis=1)    # [B,K,di]
+    win_bc = jnp.concatenate([state.conv_bc.astype(cdt), bc], axis=1)  # [B,K,2gn]
+    xc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win_x, p["conv_x_w"].astype(cdt))
+        + p["conv_x_b"].astype(cdt)
+    )
+    bcc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win_bc, p["conv_bc_w"].astype(cdt))
+        + p["conv_bc_b"].astype(cdt)
+    )
+    di, gn = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+    xs = xc.reshape(B, cfg.ssm_heads, cfg.ssm_head_dim)
+    Bm = bcc[..., :gn].reshape(B, cfg.ssm_groups, cfg.ssm_state)
+    Cm = bcc[..., gn:].reshape(B, cfg.ssm_groups, cfg.ssm_state)
+    rep = cfg.ssm_heads // cfg.ssm_groups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt[:, 0, :].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                               # [B, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = state.ssm.astype(jnp.float32)
+    h = h * jnp.exp(dt * A[None, :])[:, :, None, None] + (
+        dt[:, :, None, None] * xs.astype(jnp.float32)[..., None] * Bh[:, :, None, :]
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h).astype(cdt)
+    y = y + p["D"].astype(cdt)[None, :, None] * xs
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["inner_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(cdt)
+    return out, SsmState(conv_x=win_x[:, 1:, :], conv_bc=win_bc[:, 1:, :], ssm=h)

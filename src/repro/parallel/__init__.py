@@ -1,0 +1,34 @@
+"""Distribution: sharding rules, gradient compression, pipeline parallelism."""
+from .compress import (
+    compressed_allreduce_mean,
+    dequantize,
+    ef_compress,
+    ef_init,
+    quantize,
+)
+from .sharding import (
+    batch_specs,
+    cache_shardings,
+    cache_spec_for_kv,
+    dp_axes,
+    dp_size,
+    model_size,
+    param_shardings,
+    param_spec,
+)
+
+__all__ = [
+    "batch_specs",
+    "cache_shardings",
+    "cache_spec_for_kv",
+    "compressed_allreduce_mean",
+    "dequantize",
+    "dp_axes",
+    "dp_size",
+    "ef_compress",
+    "ef_init",
+    "model_size",
+    "param_shardings",
+    "param_spec",
+    "quantize",
+]

@@ -1,0 +1,81 @@
+"""Gradient compression: int8 block-quantized collectives + error feedback.
+
+Distributed-optimization trick for DCN-limited multi-pod training: gradients
+cross the wire as int8 payloads with per-block f32 scales (≈3.9× fewer
+bytes), and the quantization error is fed back into the next step's gradient
+(error feedback keeps SGD/Adam convergence — Karimireddy et al., 2019).
+
+``compressed_allreduce_mean`` is shard_map-compatible: each participant
+quantizes its local value, all-gathers the int8 payload + scales, and
+dequantizes/averages locally, so the HLO collective really moves 1-byte
+elements (visible in the dry-run's collective-bytes accounting).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Quantized(NamedTuple):
+    q: jax.Array       # int8 payload, padded to BLOCK multiple
+    scale: jax.Array   # f32 per-block scales
+    size: int          # original (unpadded) length
+
+
+def quantize(x: jax.Array, block: int = BLOCK) -> Quantized:
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return Quantized(q=q, scale=scale[:, 0], size=n)
+
+
+def dequantize(qt: Quantized, shape, dtype=jnp.float32) -> jax.Array:
+    flat = (qt.q.astype(jnp.float32) * qt.scale[:, None]).reshape(-1)[: qt.size]
+    return flat.reshape(shape).astype(dtype)
+
+
+def quantization_error(x: jax.Array) -> jax.Array:
+    qt = quantize(x)
+    return x.astype(jnp.float32) - dequantize(qt, x.shape)
+
+
+def compressed_allreduce_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over ``axis_name`` with int8 wire format (use inside shard_map)."""
+    qt = quantize(x)
+    qg = jax.lax.all_gather(qt.q, axis_name)          # int8 on the wire
+    sg = jax.lax.all_gather(qt.scale, axis_name)      # f32 scales (1/BLOCK size)
+    n = qg.shape[0]
+    deq = (qg.astype(jnp.float32) * sg[..., None]).reshape(n, -1)[:, : qt.size]
+    return deq.mean(axis=0).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# error feedback across steps
+# ---------------------------------------------------------------------------
+def ef_init(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress(grads: Any, residual: Any) -> tuple[Any, Any]:
+    """Returns (quantize-dequantized grads, new residual).  Apply before the
+    collective; the residual carries this step's quantization error into the
+    next step (error feedback)."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        qt = quantize(corrected)
+        deq = dequantize(qt, g.shape)
+        return deq.astype(g.dtype), corrected - deq
+
+    pairs = jax.tree.map(one, grads, residual)
+    deq = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    return deq, res

@@ -1,0 +1,192 @@
+"""Sharding rules: parameter-path → PartitionSpec for the production meshes.
+
+Axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Batch shards over pod×data; attention heads / FFN hidden /
+experts / vocab shard over model (tensor/expert parallelism); KV projections
+replicate when ``n_kv_heads`` doesn't divide the model axis (glm4 kv=2,
+granite kv=8 on a 16-way axis) — the grouped-replication standard.
+
+Decode caches pick one of three layouts (DESIGN.md §5):
+  - head-sharded   [nb, B@dp, S, KV@model, hd]   when KV divides model
+  - seq-sharded    [nb, B@dp, S@model, KV, hd]   when it doesn't
+  - fully-seq      [nb, B, S@(dp+model), KV, hd] when batch < dp size
+    (long_500k, batch=1: the whole mesh splits the sequence)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers
+# ---------------------------------------------------------------------------
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, *axes: str) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes if a in mesh.axis_names]))
+
+
+def dp_size(mesh: Mesh) -> int:
+    return axis_size(mesh, *dp_axes(mesh))
+
+
+def model_size(mesh: Mesh) -> int:
+    return axis_size(mesh, "model")
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        else:
+            names.append(str(k))
+    return names
+
+
+def param_spec(path_names: list[str], ndim: int, cfg, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (rules above)."""
+    name = path_names[-1]
+    kv_ok = (
+        cfg.n_kv_heads > 0 and cfg.n_kv_heads % model_size(mesh) == 0
+    )
+
+    def last_dims(*spec):
+        """Pad with None on the left for stacked (block) leading dims."""
+        return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+    if name == "embed":
+        return P("model", None)
+    if name == "head":
+        return P(None, "model")
+    if "norm" in name:                      # all norm vectors except inner
+        if name == "inner_norm":
+            return last_dims("model")
+        return last_dims(None)
+    if name in ("wq", "bq"):
+        return last_dims(None, "model") if name == "wq" else last_dims("model")
+    if name in ("wk", "wv"):
+        return last_dims(None, "model") if kv_ok else last_dims(None, None)
+    if name in ("bk", "bv"):
+        return last_dims("model") if kv_ok else last_dims(None)
+    if name == "wo":
+        return last_dims("model", None)
+    if name in ("w_gate", "w_up"):
+        if ndim >= 4:                       # MoE stacked experts [nb,E,d,f]
+            return last_dims("model", None, None)
+        return last_dims(None, "model")
+    if name == "w_down":
+        if ndim >= 4:
+            return last_dims("model", None, None)
+        return last_dims("model", None)
+    if name == "router":
+        return last_dims(None, None)
+    if name in ("wz", "wx"):
+        return last_dims(None, "model")
+    if name in ("wbc", "wdt"):
+        return last_dims(None, None)
+    if name == "conv_x_w":
+        return last_dims(None, "model")
+    if name == "conv_x_b":
+        return last_dims("model")
+    if name in ("conv_bc_w", "conv_bc_b", "A_log", "D", "dt_bias"):
+        return last_dims(*([None] * min(ndim, 1)))
+    if name == "out_proj":
+        return last_dims("model", None)
+    return P()  # replicate anything unmatched (scalars, counters)
+
+
+def param_shardings(abstract_params: Any, cfg, mesh: Mesh):
+    """NamedSharding pytree matching an abstract (or concrete) param tree."""
+
+    def assign(path, leaf):
+        spec = param_spec(_path_names(path), len(leaf.shape), cfg, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# batch / activation / cache rules
+# ---------------------------------------------------------------------------
+def batch_specs(cfg, mesh: Mesh, batch_size: int, *, has_embeds: bool = False,
+                encdec: bool = False) -> dict[str, P]:
+    dp = dp_axes(mesh)
+    shardable = batch_size % dp_size(mesh) == 0
+    bspec = P(dp) if shardable else P()
+    specs = {
+        "tokens": P(*bspec, None),
+        "labels": P(*bspec, None),
+    }
+    if has_embeds:
+        specs["embeds"] = P(*bspec, None, None)
+    if encdec:
+        specs["enc_embeds"] = P(*bspec, None, None)
+    return specs
+
+
+def cache_spec_for_kv(cfg, mesh: Mesh, batch_size: int) -> P:
+    """Spec for [nb, B, S, KV, hd] attention caches (layout table above).
+
+    §Perf hc3 iteration 3: sharding the cache *sequence* dim makes the
+    per-step dynamic_update_slice un-partitionable (GSPMD falls back to
+    "involuntary full rematerialization" — it replicates the whole cache).
+    When KV heads don't divide the model axis we shard ``head_dim`` instead:
+    the QK contraction becomes a sharded reduction (tiny logits psum) and
+    cache writes stay local.  Sequence stays sharded over dp when the batch
+    can't be (long_500k, batch=1)."""
+    dp = dp_axes(mesh)
+    kv_ok = cfg.n_kv_heads % model_size(mesh) == 0
+    hd_ok = cfg.head_dim % model_size(mesh) == 0
+    batch_ok = batch_size % dp_size(mesh) == 0
+    if batch_ok and kv_ok:
+        return P(None, dp, None, "model", None)
+    if batch_ok:
+        return P(None, dp, None, None, "model" if hd_ok else None)
+    return P(None, None, dp, None, "model" if hd_ok else None)
+
+
+def cache_shardings(cfg, mesh: Mesh, abstract_cache: Any, batch_size: int):
+    """Shardings for an lm.init_cache pytree (attention + ssm slots)."""
+    dp = dp_axes(mesh)
+    batch_ok = batch_size % dp_size(mesh) == 0
+    bax = dp if batch_ok else None
+    kv_spec = cache_spec_for_kv(cfg, mesh, batch_size)
+    h_ok = cfg.ssm_state and cfg.ssm_heads % model_size(mesh) == 0
+    di_ok = cfg.ssm_state and cfg.d_inner % model_size(mesh) == 0
+
+    def assign(path, leaf):
+        name = _path_names(path)[-1]
+        if name in ("k", "v"):
+            spec = kv_spec
+        elif name == "conv_x":
+            spec = P(None, bax, None, "model" if di_ok else None)
+        elif name == "conv_bc":
+            spec = P(None, bax, None, None)
+        elif name == "ssm":
+            spec = P(None, bax, "model" if h_ok else None, None, None)
+        elif name == "len":
+            spec = P()
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_cache)
+
+
+def logits_spec(cfg, mesh: Mesh, batch_size: int) -> P:
+    dp = dp_axes(mesh)
+    shardable = batch_size % dp_size(mesh) == 0
+    return P(dp if shardable else None, None, "model")

@@ -1,0 +1,4 @@
+"""Serving substrate: batched prefill/decode engine with KV/state caches."""
+from .engine import ServeEngine, make_decode_step, make_prefill_step
+
+__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step"]

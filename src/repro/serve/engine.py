@@ -1,0 +1,123 @@
+"""Batched serving engine: prefill once, decode step-by-step.
+
+The engine batches concurrent requests into a fixed decode batch, runs a
+shared jitted decode step (greedy or temperature sampling), and emits
+BigRoots telemetry per step (the serve analog of per-step train tasks:
+stragglers here are slow hosts in a multi-host serving fleet).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import Model
+from ..telemetry.events import StepTelemetry
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, temperature: float = 0.0) -> Callable:
+    def decode_step(params, tokens, cache, key):
+        logits, cache = model.decode(params, tokens, cache)
+        logits = logits[:, 0, :]
+        if temperature > 0:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], cache
+
+    return decode_step
+
+
+@dataclass
+class Request:
+    request_id: str
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 32
+    output: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        max_len: int = 512,
+        batch_size: int = 8,
+        temperature: float = 0.0,
+        telemetry: StepTelemetry | None = None,
+        eos_id: int | None = None,
+    ) -> None:
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self.telemetry = telemetry
+        self.eos_id = eos_id
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model, temperature))
+        self._key = jax.random.key(0)
+
+    def _pad_batch(self, requests: list[Request]) -> np.ndarray:
+        """Left-align prompts into a rectangular [B, S_max] batch."""
+        s_max = max(len(r.prompt) for r in requests)
+        toks = np.zeros((self.batch_size, s_max), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, : len(r.prompt)] = r.prompt  # simple equal-length demo path
+        return toks
+
+    def run(self, requests: list[Request], step_offset: int = 0) -> list[Request]:
+        """Serve up to batch_size requests to completion (batch-synchronous)."""
+        assert len(requests) <= self.batch_size
+        live = list(requests)
+        while len(live) < self.batch_size:  # pad with a dummy clone
+            live.append(Request("_pad", live[0].prompt, live[0].max_new_tokens))
+        toks = jnp.asarray(self._pad_batch(live))
+        batch = {"tokens": toks}
+
+        cache = self.model.init_cache(self.params, batch, self.max_len)
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, batch, cache)
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(nxt)
+        prefill_s = time.time() - t0
+
+        max_new = max(r.max_new_tokens for r in requests)
+        for step in range(max_new):
+            if self.telemetry is not None:
+                with self.telemetry.step(step_offset + step) as scope:
+                    with scope.phase("compute"):
+                        self._key, sub = jax.random.split(self._key)
+                        nxt, cache = self._decode(self.params, nxt, cache, sub)
+                        jax.block_until_ready(nxt)
+                    scope.add("read_bytes", float(nxt.size * 4))
+            else:
+                self._key, sub = jax.random.split(self._key)
+                nxt, cache = self._decode(self.params, nxt, cache, sub)
+            out = np.asarray(nxt[:, 0])
+            for i, r in enumerate(requests):
+                if r.done or len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                tok = int(out[i])
+                r.output.append(tok)
+                if self.eos_id is not None and tok == self.eos_id:
+                    r.done = True
+            if all(r.done for r in requests):
+                break
+        for r in requests:
+            r.done = True
+        self.last_prefill_seconds = prefill_s
+        return requests

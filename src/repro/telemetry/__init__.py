@@ -1,0 +1,19 @@
+"""Telemetry: system samplers (Eq. 1-3), resource timelines, step events.
+
+This is the data-acquisition substrate under BigRoots: the Spark-log +
+mpstat/iostat/sar layer of the paper, re-homed onto an SPMD training host
+(DESIGN.md §2 mapping table).
+"""
+from .events import GcTimer, StepTelemetry
+from .sampler import SystemSampler, read_cpu_sample, read_disk_sample, read_net_sample
+from .timeline import ResourceTimeline
+
+__all__ = [
+    "GcTimer",
+    "ResourceTimeline",
+    "StepTelemetry",
+    "SystemSampler",
+    "read_cpu_sample",
+    "read_disk_sample",
+    "read_net_sample",
+]

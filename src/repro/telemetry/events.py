@@ -1,0 +1,176 @@
+"""Step-scoped telemetry: turn one host's training/serving step into a
+BigRoots :class:`TaskRecord`.
+
+This is the "Spark log file" layer of the paper, adapted to SPMD training
+(DESIGN.md §2): per step, each host times its local phases (data load, h2d,
+compute-until-barrier, d2h, checkpoint), accumulates byte counters and GC
+pauses, and emits a TaskRecord whose stage is the step window.  The
+*pre-barrier duration* (host-local work) is the task duration — the honest
+analog of a Spark task's runtime under a synchronous collective.
+"""
+from __future__ import annotations
+
+import gc
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+from ..core.records import TaskRecord, Trace
+from .timeline import ResourceTimeline
+
+
+class GcTimer:
+    """Accumulates Python GC pause time via gc callbacks (the 'JVM GC time'
+    analog for a Python-driven input pipeline)."""
+
+    def __init__(self, clock=time.perf_counter) -> None:
+        self._clock = clock
+        self._start: float | None = None
+        self.total = 0.0
+        self._installed = False
+
+    def _cb(self, phase: str, info: dict) -> None:
+        if phase == "start":
+            self._start = self._clock()
+        elif phase == "stop" and self._start is not None:
+            self.total += self._clock() - self._start
+            self._start = None
+
+    def install(self) -> "GcTimer":
+        if not self._installed:
+            gc.callbacks.append(self._cb)
+            self._installed = True
+        return self
+
+    def uninstall(self) -> None:
+        if self._installed:
+            gc.callbacks.remove(self._cb)
+            self._installed = False
+
+    def take(self) -> float:
+        """Return accumulated pause time and reset."""
+        t, self.total = self.total, 0.0
+        return t
+
+    def __enter__(self) -> "GcTimer":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+
+@dataclass
+class StepScope:
+    """Mutable accumulator for one step on one host."""
+
+    node: str
+    step: int
+    start: float
+    clock: object
+    phases: dict[str, float] = field(default_factory=dict)
+    counters: dict[str, float] = field(default_factory=dict)
+    locality: int = 0
+    end: float | None = None
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = self.clock()
+        try:
+            yield
+        finally:
+            self.phases[name] = self.phases.get(name, 0.0) + (self.clock() - t0)
+
+    def add(self, counter: str, value: float) -> None:
+        self.counters[counter] = self.counters.get(counter, 0.0) + value
+
+    def set_locality(self, locality: int) -> None:
+        self.locality = locality
+
+
+class StepTelemetry:
+    """Per-host TaskRecord emitter.
+
+    Usage::
+
+        telem = StepTelemetry(node="host3", timeline=tl)
+        with telem.step(i) as s:
+            with s.phase("data_load"): batch = next(it)
+            s.add("read_bytes", batch.nbytes)
+            with s.phase("h2d"): batch = jax.device_put(batch)
+            with s.phase("compute"): state, loss = train_step(state, batch)
+        trace = telem.trace
+    """
+
+    # phase name → TIME feature name in the JAX schema
+    _PHASE_FEATURES = {
+        "data_load": "data_load_time",
+        "h2d": "h2d_time",
+        "d2h": "d2h_time",
+        "ckpt": "ckpt_time",
+    }
+    _RESOURCE_METRICS = ("cpu", "disk", "network")
+
+    def __init__(
+        self,
+        node: str,
+        timeline: ResourceTimeline | None = None,
+        window: int = 1,
+        clock=time.time,
+        gc_timer: GcTimer | None = None,
+    ) -> None:
+        self.node = node
+        self.timeline = timeline
+        self.window = max(int(window), 1)
+        self.clock = clock
+        self.gc_timer = gc_timer
+        self.trace = Trace()
+
+    def stage_id_for(self, step: int) -> str:
+        """Stage = window of `window` consecutive steps (peer pooling)."""
+        return f"steps_{(step // self.window) * self.window:06d}"
+
+    @contextmanager
+    def step(self, step: int):
+        scope = StepScope(node=self.node, step=step, start=self.clock(), clock=self.clock)
+        if self.gc_timer is not None:
+            self.gc_timer.take()  # reset accumulator at step start
+        try:
+            yield scope
+        finally:
+            scope.end = self.clock()
+            self._emit(scope)
+
+    # -- record construction ----------------------------------------------------
+    def _emit(self, scope: StepScope) -> None:
+        features: dict[str, float] = {}
+        for phase, feat in self._PHASE_FEATURES.items():
+            if phase in scope.phases:
+                features[feat] = scope.phases[phase]
+        if self.gc_timer is not None:
+            features["gc_time"] = self.gc_timer.take()
+        features.update(scope.counters)
+
+        # Resource features: Eq. 1-3 window means over the task interval.
+        if self.timeline is not None:
+            for metric in self._RESOURCE_METRICS:
+                val = self.timeline.window_mean(self.node, metric, scope.start, scope.end)
+                if val is not None:
+                    features[metric] = val
+
+        self.trace.add_task(
+            TaskRecord(
+                task_id=f"{self.node}/step{scope.step:06d}",
+                stage_id=self.stage_id_for(scope.step),
+                node=self.node,
+                start=scope.start,
+                end=scope.end,
+                locality=scope.locality,
+                features=features,
+            )
+        )
+
+    # -- merging (multi-host traces are concatenated by the launcher) -----------
+    def merge_into(self, trace: Trace) -> None:
+        for stage in self.trace.stages():
+            for task in stage.tasks:
+                trace.add_task(task)

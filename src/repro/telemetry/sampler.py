@@ -1,0 +1,158 @@
+"""System utilization samplers — mpstat/iostat/sar analogs over /proc.
+
+Paper §III-A.1 samples user CPU time (MPSTAT), I/O time (IOSTAT) and network
+byte rate (SAR) at 1 Hz; the per-task features are the window averages of
+those samples (Eq. 1-3).  Here the same three quantities are read straight
+from ``/proc/stat``, ``/proc/diskstats`` and ``/proc/net/dev`` — no external
+tools — and pushed into a :class:`ResourceTimeline`.
+
+Overhead (paper Table VII analog, measured by ``benchmarks/table7_overhead``):
+one read+parse of the three files per second, <1% of one core.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+from .timeline import ResourceTimeline
+
+_PROC_STAT = "/proc/stat"
+_PROC_DISKSTATS = "/proc/diskstats"
+_PROC_NETDEV = "/proc/net/dev"
+
+# Device prefixes that are not physical disks.
+_SKIP_DISK_PREFIXES = ("loop", "ram", "zram", "dm-", "sr", "fd", "md")
+
+
+@dataclass(frozen=True)
+class CpuSample:
+    user: int   # user + nice jiffies
+    total: int  # all jiffies
+
+
+@dataclass(frozen=True)
+class DiskSample:
+    io_ticks_ms: int  # time spent doing I/O, summed over physical devices
+
+
+@dataclass(frozen=True)
+class NetSample:
+    bytes_total: int  # rx + tx over non-loopback interfaces
+
+
+def read_cpu_sample(path: str = _PROC_STAT) -> CpuSample:
+    with open(path) as f:
+        line = f.readline()
+    parts = line.split()
+    vals = [int(x) for x in parts[1:]]
+    user = vals[0] + vals[1]  # user + nice
+    return CpuSample(user=user, total=sum(vals))
+
+
+def read_disk_sample(path: str = _PROC_DISKSTATS) -> DiskSample:
+    ticks = 0
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if len(parts) < 13:
+                continue
+            name = parts[2]
+            if name.startswith(_SKIP_DISK_PREFIXES):
+                continue
+            # Only whole devices (skip partitions like sda1) — heuristic: skip
+            # names ending in a digit unless nvme ('nvme0n1' is a whole device).
+            if name[-1].isdigit() and not name.startswith("nvme"):
+                continue
+            if name.startswith("nvme") and "p" in name.split("n", 2)[-1]:
+                continue
+            ticks += int(parts[12])  # field 13: io_ticks (ms)
+    return DiskSample(io_ticks_ms=ticks)
+
+
+def read_net_sample(path: str = _PROC_NETDEV) -> NetSample:
+    total = 0
+    with open(path) as f:
+        lines = f.readlines()[2:]
+    for line in lines:
+        if ":" not in line:
+            continue
+        name, rest = line.split(":", 1)
+        if name.strip() == "lo":
+            continue
+        parts = rest.split()
+        total += int(parts[0]) + int(parts[8])  # rx_bytes + tx_bytes
+    return NetSample(bytes_total=total)
+
+
+class SystemSampler:
+    """1 Hz background sampler emitting Eq. 1-3 quantities into a timeline.
+
+    Emitted metrics (matching the feature schema):
+      cpu     — user-time fraction over the last interval (Eq. 1 integrand)
+      disk    — I/O-time fraction over the last interval (Eq. 2 integrand)
+      network — bytes/sec over the last interval (Eq. 3 integrand)
+    """
+
+    def __init__(
+        self,
+        node: str,
+        timeline: ResourceTimeline,
+        interval: float = 1.0,
+        clock=time.time,
+    ) -> None:
+        self.node = node
+        self.timeline = timeline
+        self.interval = interval
+        self.clock = clock
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._prev: tuple[CpuSample, DiskSample, NetSample, float] | None = None
+
+    # -- manual stepping (used by tests and by the serve loop) ---------------
+    def sample_once(self) -> None:
+        now = self.clock()
+        cur = (read_cpu_sample(), read_disk_sample(), read_net_sample(), now)
+        if self._prev is not None:
+            pc, pd, pn, pt = self._prev
+            cc, cd, cn, _ = cur
+            dt = max(now - pt, 1e-9)
+            d_total = max(cc.total - pc.total, 1)
+            cpu = (cc.user - pc.user) / d_total
+            disk = min((cd.io_ticks_ms - pd.io_ticks_ms) / (dt * 1000.0), 1.0)
+            net = (cn.bytes_total - pn.bytes_total) / dt
+            self.timeline.record(self.node, "cpu", now, max(cpu, 0.0))
+            self.timeline.record(self.node, "disk", now, max(disk, 0.0))
+            self.timeline.record(self.node, "network", now, max(net, 0.0))
+        self._prev = cur
+
+    # -- background thread -----------------------------------------------------
+    def start(self) -> "SystemSampler":
+        if self._thread is not None:
+            raise RuntimeError("sampler already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"sampler-{self.node}")
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        self.sample_once()
+        while not self._stop.wait(self.interval):
+            try:
+                self.sample_once()
+            except OSError:
+                # /proc hiccup: skip the sample rather than die.
+                continue
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "SystemSampler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

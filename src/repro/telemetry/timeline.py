@@ -1,0 +1,87 @@
+"""Resource timelines: per-(node, metric) time series with window queries.
+
+The store behind Eq. 1-3 (window-averaged utilization) and Eq. 6 (edge
+detection needs the mean utilization just before a task starts and just after
+it ends).  Samples are appended in time order by the 1 Hz sampler; queries
+use binary search, so a multi-hour trace with thousands of nodes stays fast.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+from collections import defaultdict
+from typing import Iterable
+
+
+class ResourceTimeline:
+    """Append-mostly store of (t, value) samples keyed by (node, metric)."""
+
+    def __init__(self) -> None:
+        self._ts: dict[tuple[str, str], list[float]] = defaultdict(list)
+        self._vals: dict[tuple[str, str], list[float]] = defaultdict(list)
+
+    # -- writing ---------------------------------------------------------------
+    def record(self, node: str, metric: str, t: float, value: float) -> None:
+        key = (node, metric)
+        ts = self._ts[key]
+        if ts and t < ts[-1]:
+            # Out-of-order insert (merged traces): keep sorted.
+            i = bisect.bisect_left(ts, t)
+            ts.insert(i, t)
+            self._vals[key].insert(i, value)
+        else:
+            ts.append(t)
+            self._vals[key].append(value)
+
+    def record_many(self, node: str, metric: str,
+                    samples: Iterable[tuple[float, float]]) -> None:
+        for t, v in samples:
+            self.record(node, metric, t, v)
+
+    # -- queries ------------------------------------------------------------
+    def window_mean(self, node: str, metric: str, t0: float, t1: float) -> float | None:
+        """Mean of samples with t0 <= t <= t1; None if no samples in window."""
+        key = (node, metric)
+        ts = self._ts.get(key)
+        if not ts:
+            return None
+        lo = bisect.bisect_left(ts, t0)
+        hi = bisect.bisect_right(ts, t1)
+        if hi <= lo:
+            return None
+        vals = self._vals[key]
+        return sum(vals[lo:hi]) / (hi - lo)
+
+    def series(self, node: str, metric: str) -> tuple[list[float], list[float]]:
+        key = (node, metric)
+        return list(self._ts.get(key, [])), list(self._vals.get(key, []))
+
+    def nodes(self) -> list[str]:
+        return sorted({n for (n, _m) in self._ts})
+
+    def metrics(self, node: str) -> list[str]:
+        return sorted({m for (n, m) in self._ts if n == node})
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._ts.values())
+
+    # -- persistence -------------------------------------------------------
+    def dump_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            for (node, metric), ts in self._ts.items():
+                vals = self._vals[(node, metric)]
+                f.write(json.dumps({"node": node, "metric": metric,
+                                    "ts": ts, "vals": vals}) + "\n")
+
+    @staticmethod
+    def load_jsonl(path: str) -> "ResourceTimeline":
+        tl = ResourceTimeline()
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                obj = json.loads(line)
+                tl._ts[(obj["node"], obj["metric"])] = list(map(float, obj["ts"]))
+                tl._vals[(obj["node"], obj["metric"])] = list(map(float, obj["vals"]))
+        return tl

@@ -1,0 +1,25 @@
+"""Training substrate: AdamW, schedules, train-step builder."""
+from .optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    make_schedule,
+)
+from .step import abstract_state, init_state, make_train_step, state_shardings
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "abstract_state",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "init_state",
+    "make_schedule",
+    "make_train_step",
+    "state_shardings",
+]

@@ -1,0 +1,117 @@
+"""AdamW + gradient clipping + LR schedules, pure JAX.
+
+Optimizer state is a pytree shaped like the parameters (m, v) and therefore
+shards with the same PartitionSpecs (ZeRO-style: every state shard lives
+with its parameter shard; no replication of optimizer memory).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array       # [] int32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"       # "cosine" | "linear" | "constant"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def make_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        frac = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac)
+            )
+        elif cfg.schedule == "linear":
+            decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+        else:
+            decay = jnp.float32(1.0)
+        return cfg.lr * warm * decay
+
+    return sched
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+# Parameters exempt from weight decay (norms, biases, 1-d vectors).
+def _decay_mask(path, leaf) -> bool:
+    name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    return leaf.ndim >= 2 and "norm" not in name and not name.startswith("b")
+
+
+def adamw_update(
+    grads: Any, state: AdamWState, params: Any, cfg: AdamWConfig
+) -> tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = make_schedule(cfg)(step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    decay_tree = jax.tree_util.tree_map_with_path(_decay_mask, params)
+
+    def upd(p, g, m, v, decay):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if_decay = cfg.weight_decay if decay else 0.0
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + if_decay * p32)
+        return p_new.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v, decay_tree)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda o: isinstance(o, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(m=new_m, v=new_v, step=step), metrics

@@ -1,0 +1,271 @@
+"""Unit tests for the BigRoots core analyzer (paper §III rules)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BigRootsAnalyzer,
+    BigRootsThresholds,
+    JAX_FEATURES,
+    PCCAnalyzer,
+    PCCThresholds,
+    SPARK_FEATURES,
+    StageRecord,
+    TaskRecord,
+    Trace,
+    found_set,
+    straggler_mask,
+    straggler_scale,
+)
+from repro.core.features import FeatureKind
+
+
+def mk_task(i, node, dur, stage="s0", start=0.0, locality=0, **features):
+    return TaskRecord(
+        task_id=f"t{i}",
+        stage_id=stage,
+        node=node,
+        start=start,
+        end=start + dur,
+        locality=locality,
+        features=features,
+    )
+
+
+def uniform_stage(n=20, nodes=4, dur=10.0, **features) -> list[TaskRecord]:
+    return [mk_task(i, f"n{i % nodes}", dur, **features) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection (§II-A: 1.5 × median)
+# ---------------------------------------------------------------------------
+class TestStragglerDetection:
+    def test_mantri_definition(self):
+        durs = np.array([10.0] * 9 + [16.0])
+        mask = straggler_mask(durs)
+        assert mask.sum() == 1 and mask[-1]
+
+    def test_boundary_is_strict(self):
+        durs = np.array([10.0] * 9 + [15.0])  # exactly 1.5x: not a straggler
+        assert not straggler_mask(durs).any()
+
+    def test_empty(self):
+        assert straggler_mask(np.array([])).size == 0
+
+    def test_scale(self):
+        scales = straggler_scale(np.array([10.0, 20.0, 10.0]))
+        assert scales[1] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5: numerical feature rules
+# ---------------------------------------------------------------------------
+class TestNumericalRule:
+    def test_skewed_shuffle_identified(self):
+        tasks = uniform_stage(n=20, shuffle_read_bytes=100.0)
+        # straggler with 10x shuffle read on another node
+        tasks.append(mk_task(99, "n9", 30.0, shuffle_read_bytes=1000.0))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "shuffle_read_bytes") in {c.key for c in causes}
+
+    def test_normal_variance_not_flagged(self):
+        # Straggler but its feature matches the peers → no cause.
+        tasks = uniform_stage(n=20, shuffle_read_bytes=100.0)
+        tasks.append(mk_task(99, "n9", 30.0, shuffle_read_bytes=100.0))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "shuffle_read_bytes") not in {c.key for c in causes}
+
+    def test_non_straggler_never_flagged(self):
+        # Huge feature on a FAST task: not a straggler, so no finding.
+        tasks = uniform_stage(n=20, shuffle_read_bytes=100.0)
+        tasks.append(mk_task(99, "n9", 10.0, shuffle_read_bytes=1000.0))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        assert not an.analyze_stage(StageRecord("s0", tasks)).root_causes
+
+    def test_quantile_gate_blocks_small_absolute_values(self):
+        # Eq. 5 condition 1: value must clear the global quantile, not just peers.
+        tasks = [mk_task(i, f"n{i%4}", 10.0, shuffle_read_bytes=v)
+                 for i, v in enumerate([1000.0] * 16)]
+        # straggler's value is above its (zero-ish) intra peers but far below quantile
+        tasks.append(mk_task(99, "n9", 30.0, shuffle_read_bytes=10.0))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "shuffle_read_bytes") not in {c.key for c in causes}
+
+    def test_intra_node_observation_fires(self):
+        # Observation 2 (§III-A): abnormal vs same-node peers.
+        # All inter-node tasks also heavy so inter rule can't fire; intra can.
+        tasks = [mk_task(i, "other", 10.0, read_bytes=500.0) for i in range(16)]
+        tasks += [mk_task(100 + i, "me", 10.0, read_bytes=10.0) for i in range(3)]
+        tasks.append(mk_task(199, "me", 30.0, read_bytes=600.0))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        hit = [c for c in causes if c.key == ("t199", "read_bytes")]
+        assert hit and "intra" in hit[0].peer_groups
+
+
+# ---------------------------------------------------------------------------
+# Time features: the F > 0.2 significance floor
+# ---------------------------------------------------------------------------
+class TestTimeRule:
+    def test_insignificant_gc_filtered(self):
+        # GC is 10x the peers' but only 1% of task duration → filtered.
+        tasks = uniform_stage(n=20, jvm_gc_time=0.01)
+        tasks.append(mk_task(99, "n9", 30.0, jvm_gc_time=0.3))  # 1% of 30s
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "jvm_gc_time") not in {c.key for c in causes}
+
+    def test_significant_gc_identified(self):
+        tasks = uniform_stage(n=20, jvm_gc_time=0.1)
+        tasks.append(mk_task(99, "n9", 30.0, jvm_gc_time=12.0))  # 40% of 30s
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "jvm_gc_time") in {c.key for c in causes}
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7: locality rule
+# ---------------------------------------------------------------------------
+class TestLocalityRule:
+    def test_remote_straggler_local_peers(self):
+        tasks = uniform_stage(n=20, locality=0)
+        tasks.append(mk_task(99, "n9", 30.0, locality=2))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "locality") in {c.key for c in causes}
+
+    def test_everyone_remote_no_cause(self):
+        # Eq. 7 vote fails when normal tasks are mostly remote too.
+        tasks = uniform_stage(n=20, locality=2)
+        tasks.append(mk_task(99, "n9", 30.0, locality=2))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "locality") not in {c.key for c in causes}
+
+    def test_node_local_straggler_not_flagged(self):
+        tasks = uniform_stage(n=20, locality=0)
+        tasks.append(mk_task(99, "n9", 30.0, locality=1))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "locality") not in {c.key for c in causes}
+
+
+# ---------------------------------------------------------------------------
+# Eq. 6: edge detection on resource features
+# ---------------------------------------------------------------------------
+class FakeTimelines:
+    """window_mean driven by a dict {(node, metric): (head_val, tail_val)}."""
+
+    def __init__(self, table, task_windows):
+        self.table = table
+        self.task_windows = task_windows  # [(start, end)] to tell head from tail
+
+    def window_mean(self, node, metric, t0, t1):
+        head, tail = self.table.get((node, metric), (None, None))
+        # Window ending at a task start → head; starting at a task end → tail.
+        for s, e in self.task_windows:
+            if abs(t1 - s) < 1e-9:
+                return head
+            if abs(t0 - e) < 1e-9:
+                return tail
+        return None
+
+
+class TestEdgeDetection:
+    def _stage_with_hot_cpu_straggler(self):
+        tasks = uniform_stage(n=20, cpu=0.2)
+        straggler = mk_task(99, "n9", 30.0, cpu=0.95)
+        tasks.append(straggler)
+        return tasks, straggler
+
+    def test_external_contention_kept(self):
+        tasks, straggler = self._stage_with_hot_cpu_straggler()
+        tl = FakeTimelines({("n9", "cpu"): (0.9, 0.9)}, [(straggler.start, straggler.end)])
+        an = BigRootsAnalyzer(SPARK_FEATURES, timelines=tl)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "cpu") in {c.key for c in causes}
+
+    def test_self_generated_load_filtered(self):
+        # Utilization low before and after the task → the task caused it.
+        tasks, straggler = self._stage_with_hot_cpu_straggler()
+        tl = FakeTimelines({("n9", "cpu"): (0.05, 0.05)}, [(straggler.start, straggler.end)])
+        an = BigRootsAnalyzer(SPARK_FEATURES, timelines=tl)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "cpu") not in {c.key for c in causes}
+
+    def test_no_timeline_keeps_feature(self):
+        tasks, _ = self._stage_with_hot_cpu_straggler()
+        an = BigRootsAnalyzer(SPARK_FEATURES, timelines=None)
+        causes = an.analyze_stage(StageRecord("s0", tasks)).root_causes
+        assert ("t99", "cpu") in {c.key for c in causes}
+
+
+# ---------------------------------------------------------------------------
+# PCC baseline (Eq. 8)
+# ---------------------------------------------------------------------------
+class TestPCC:
+    def test_correlated_feature_found(self):
+        rng = np.random.default_rng(0)
+        tasks = []
+        for i in range(30):
+            # durations linear in read_bytes, with a heavy tail past 1.5x median
+            dur = 10.0 + (i ** 2) * 0.05
+            tasks.append(mk_task(i, f"n{i%4}", dur, read_bytes=dur * 100 + rng.normal(0, 10)))
+        an = PCCAnalyzer(SPARK_FEATURES, PCCThresholds(pearson=0.5, max_quantile=0.8))
+        found = an.analyze_stage(StageRecord("s0", tasks))
+        # slowest tasks are stragglers & their read_bytes is top-quantile
+        assert any(f == "read_bytes" for _, f in found)
+
+    def test_uncorrelated_not_found(self):
+        rng = np.random.default_rng(1)
+        tasks = [
+            mk_task(i, f"n{i%4}", 10.0, read_bytes=float(rng.uniform(50, 150)))
+            for i in range(30)
+        ]
+        tasks.append(mk_task(99, "n9", 30.0, read_bytes=100.0))
+        an = PCCAnalyzer(SPARK_FEATURES)
+        found = an.analyze_stage(StageRecord("s0", tasks))
+        assert not {f for _, f in found if f == "read_bytes"}
+
+    def test_zero_variance_guard(self):
+        tasks = uniform_stage(n=10, read_bytes=100.0)
+        tasks.append(mk_task(99, "n9", 30.0, read_bytes=100.0))
+        an = PCCAnalyzer(SPARK_FEATURES)
+        assert isinstance(an.analyze_stage(StageRecord("s0", tasks)), set)
+
+
+# ---------------------------------------------------------------------------
+# Trace round-trip / schema plumbing
+# ---------------------------------------------------------------------------
+class TestTrace:
+    def test_jsonl_roundtrip(self, tmp_path):
+        trace = Trace()
+        for t in uniform_stage(n=5, cpu=0.5, read_bytes=10.0):
+            trace.add_task(t)
+        p = tmp_path / "trace.jsonl"
+        trace.dump_jsonl(str(p))
+        loaded = Trace.load_jsonl(str(p))
+        assert loaded.num_tasks == 5
+        orig = next(iter(trace.stages())).tasks[0]
+        got = next(iter(loaded.stages())).tasks[0]
+        assert got == orig
+
+    def test_jax_schema_has_all_kinds(self):
+        kinds = {s.kind for s in JAX_FEATURES}
+        assert kinds == {
+            FeatureKind.NUMERICAL,
+            FeatureKind.TIME,
+            FeatureKind.RESOURCE,
+            FeatureKind.DISCRETE,
+        }
+
+    def test_found_set(self):
+        tasks = uniform_stage(n=20, shuffle_read_bytes=100.0)
+        tasks.append(mk_task(99, "n9", 30.0, shuffle_read_bytes=1000.0))
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        trace = Trace([StageRecord("s0", tasks)])
+        assert ("t99", "shuffle_read_bytes") in found_set(an.root_causes(trace))

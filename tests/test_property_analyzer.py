@@ -1,0 +1,162 @@
+"""Property-based tests (hypothesis): the vectorized analyzer is equivalent
+to the literal equation transcription, plus invariants of the rules."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BigRootsAnalyzer,
+    BigRootsThresholds,
+    SPARK_FEATURES,
+    StageRecord,
+    TaskRecord,
+    found_set,
+    straggler_mask,
+)
+from repro.core.reference import reference_root_causes
+
+
+@st.composite
+def stages(draw):
+    n = draw(st.integers(min_value=2, max_value=40))
+    n_nodes = draw(st.integers(min_value=1, max_value=6))
+    tasks = []
+    for i in range(n):
+        dur = draw(st.floats(min_value=0.5, max_value=100.0,
+                             allow_nan=False, allow_infinity=False))
+        feats = {
+            "cpu": draw(st.floats(min_value=0.0, max_value=1.0)),
+            "disk": draw(st.floats(min_value=0.0, max_value=1.0)),
+            "network": draw(st.floats(min_value=0.0, max_value=1e8)),
+            "read_bytes": draw(st.floats(min_value=0.0, max_value=1e9)),
+            "shuffle_read_bytes": draw(st.floats(min_value=0.0, max_value=1e9)),
+            "jvm_gc_time": draw(st.floats(min_value=0.0, max_value=dur)),
+        }
+        tasks.append(TaskRecord(
+            task_id=f"t{i}", stage_id="s", node=f"n{i % n_nodes}",
+            start=0.0, end=dur,
+            locality=draw(st.sampled_from([0, 0, 0, 1, 2])),
+            features=feats,
+        ))
+    return StageRecord("s", tasks)
+
+
+@st.composite
+def thresholds(draw):
+    return BigRootsThresholds(
+        quantile=draw(st.sampled_from([0.5, 0.7, 0.8, 0.9, 0.95])),
+        peer_mean=draw(st.sampled_from([1.0, 1.25, 1.5, 2.0])),
+    )
+
+
+class TestEquivalence:
+    @settings(max_examples=150, deadline=None)
+    @given(stages(), thresholds())
+    def test_vectorized_matches_reference(self, stage, th):
+        """Production (numpy) analyzer ≡ literal transcription of Eq. 5-7."""
+        an = BigRootsAnalyzer(SPARK_FEATURES, th)
+        got = found_set(an.analyze_stage(stage).root_causes)
+        want = reference_root_causes(stage, SPARK_FEATURES, th)
+        assert got == want
+
+
+class TestInvariants:
+    @settings(max_examples=60, deadline=None)
+    @given(stages())
+    def test_only_stragglers_flagged(self, stage):
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        sa = an.analyze_stage(stage)
+        straggler_set = set(sa.straggler_ids)
+        for c in sa.root_causes:
+            assert c.task_id in straggler_set
+
+    @settings(max_examples=60, deadline=None)
+    @given(stages())
+    def test_task_order_irrelevant(self, stage):
+        """Shuffling task order must not change the finding set."""
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        got = found_set(an.analyze_stage(stage).root_causes)
+        rng = np.random.default_rng(0)
+        perm = list(stage.tasks)
+        rng.shuffle(perm)
+        got_shuffled = found_set(
+            an.analyze_stage(StageRecord("s", perm)).root_causes
+        )
+        assert got == got_shuffled
+
+    @settings(max_examples=60, deadline=None)
+    @given(stages())
+    def test_feature_scale_invariance(self, stage):
+        """Numerical features are stage-mean normalized → scaling all tasks'
+        bytes by a constant changes nothing (Table II: B/B_avg)."""
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        got = found_set(an.analyze_stage(stage).root_causes)
+        scaled = [
+            TaskRecord(
+                task_id=t.task_id, stage_id=t.stage_id, node=t.node,
+                start=t.start, end=t.end, locality=t.locality,
+                features={
+                    k: (v * 1000.0 if k.endswith("bytes") else v)
+                    for k, v in t.features.items()
+                },
+            )
+            for t in stage.tasks
+        ]
+        got_scaled = found_set(
+            an.analyze_stage(StageRecord("s", scaled)).root_causes
+        )
+        assert got == got_scaled
+
+    @settings(max_examples=60, deadline=None)
+    @given(stages(), st.floats(min_value=1.05, max_value=3.0))
+    def test_straggler_threshold_monotone(self, stage, factor):
+        """Raising the straggler threshold can only shrink the straggler set."""
+        durs = np.array([t.duration for t in stage.tasks])
+        lo = straggler_mask(durs, 1.5)
+        hi = straggler_mask(durs, 1.5 * factor)
+        assert not np.any(hi & ~lo)
+
+    @settings(max_examples=40, deadline=None)
+    @given(stages(), st.floats(min_value=0.0, max_value=1.0),
+           st.floats(min_value=0.0, max_value=1.0))
+    def test_quantile_threshold_monotone(self, stage, q1, q2):
+        """A stricter quantile gate can only remove findings (Eq. 5 cond 1)."""
+        if q1 > q2:
+            q1, q2 = q2, q1
+        lo = found_set(BigRootsAnalyzer(
+            SPARK_FEATURES, BigRootsThresholds(quantile=q1)
+        ).analyze_stage(stage).root_causes)
+        hi = found_set(BigRootsAnalyzer(
+            SPARK_FEATURES, BigRootsThresholds(quantile=q2)
+        ).analyze_stage(stage).root_causes)
+        # locality (discrete) ignores the quantile gate — compare the rest
+        lo = {p for p in lo if p[1] != "locality"}
+        hi = {p for p in hi if p[1] != "locality"}
+        assert hi <= lo
+
+
+class TestRocProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(
+        st.tuples(st.floats(0, 1, allow_nan=False),
+                  st.floats(0, 1, allow_nan=False)),
+        min_size=1, max_size=20,
+    ))
+    def test_auc_bounds(self, pts):
+        from repro.core.roc import RocPoint, auc
+
+        points = [RocPoint(f, t, ()) for f, t in pts]
+        a = auc(points)
+        assert 0.0 <= a <= 1.0
+
+    def test_auc_perfect_classifier(self):
+        from repro.core.roc import RocPoint, auc
+
+        assert auc([RocPoint(0.0, 1.0, ())]) == 1.0
+
+    def test_auc_diagonal(self):
+        from repro.core.roc import RocPoint, auc
+
+        pts = [RocPoint(x, x, ()) for x in (0.25, 0.5, 0.75)]
+        assert abs(auc(pts) - 0.5) < 1e-9

@@ -1,0 +1,193 @@
+"""Tests for telemetry (timelines, samplers, step events) and the sim cluster."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.anomaly import Injection, InjectionSchedule, SimCluster, overlap
+from repro.core import (
+    BigRootsAnalyzer,
+    JAX_FEATURES,
+    SPARK_FEATURES,
+    evaluate,
+    found_set,
+)
+from repro.telemetry import (
+    GcTimer,
+    ResourceTimeline,
+    StepTelemetry,
+    SystemSampler,
+    read_cpu_sample,
+    read_disk_sample,
+    read_net_sample,
+)
+
+
+class TestTimeline:
+    def test_window_mean(self):
+        tl = ResourceTimeline()
+        for t in range(10):
+            tl.record("n0", "cpu", float(t), 0.1 * t)
+        assert tl.window_mean("n0", "cpu", 2.0, 4.0) == pytest.approx(0.3)
+        assert tl.window_mean("n0", "cpu", 100.0, 110.0) is None
+        assert tl.window_mean("nX", "cpu", 0.0, 1.0) is None
+
+    def test_out_of_order_insert(self):
+        tl = ResourceTimeline()
+        tl.record("n0", "cpu", 5.0, 0.5)
+        tl.record("n0", "cpu", 1.0, 0.1)
+        ts, vals = tl.series("n0", "cpu")
+        assert ts == [1.0, 5.0] and vals == [0.1, 0.5]
+
+    def test_jsonl_roundtrip(self, tmp_path):
+        tl = ResourceTimeline()
+        tl.record("n0", "cpu", 1.0, 0.5)
+        tl.record("n1", "network", 2.0, 1e6)
+        p = str(tmp_path / "tl.jsonl")
+        tl.dump_jsonl(p)
+        loaded = ResourceTimeline.load_jsonl(p)
+        assert loaded.window_mean("n0", "cpu", 0.0, 2.0) == pytest.approx(0.5)
+        assert loaded.nodes() == ["n0", "n1"]
+
+
+class TestProcSamplers:
+    def test_read_proc_files(self):
+        cpu = read_cpu_sample()
+        assert cpu.total >= cpu.user > 0
+        disk = read_disk_sample()
+        assert disk.io_ticks_ms >= 0
+        net = read_net_sample()
+        assert net.bytes_total >= 0
+
+    def test_sampler_produces_metrics(self):
+        tl = ResourceTimeline()
+        s = SystemSampler("host0", tl, interval=0.05)
+        s.sample_once()
+        time.sleep(0.05)
+        s.sample_once()
+        for metric in ("cpu", "disk", "network"):
+            assert tl.window_mean("host0", metric, 0, time.time() + 1) is not None
+
+    def test_sampler_thread_lifecycle(self):
+        tl = ResourceTimeline()
+        with SystemSampler("host0", tl, interval=0.02):
+            time.sleep(0.15)
+        assert len(tl) >= 3
+
+
+class TestStepTelemetry:
+    def test_step_record_emission(self):
+        fake_now = [100.0]
+
+        def clock():
+            return fake_now[0]
+
+        tl = ResourceTimeline()
+        for t in range(95, 130):
+            tl.record("h0", "cpu", float(t), 0.4)
+            tl.record("h0", "disk", float(t), 0.1)
+            tl.record("h0", "network", float(t), 1e6)
+        telem = StepTelemetry("h0", timeline=tl, window=1, clock=clock)
+        with telem.step(7) as s:
+            with s.phase("data_load"):
+                fake_now[0] += 1.0
+            s.add("read_bytes", 1024.0)
+            with s.phase("h2d"):
+                fake_now[0] += 0.5
+            with s.phase("compute"):
+                fake_now[0] += 3.0
+            s.set_locality(1)
+        stage = telem.trace.stage("steps_000007")
+        task = stage.tasks[0]
+        assert task.duration == pytest.approx(4.5)
+        assert task.features["data_load_time"] == pytest.approx(1.0)
+        assert task.features["h2d_time"] == pytest.approx(0.5)
+        assert task.features["read_bytes"] == 1024.0
+        assert task.features["cpu"] == pytest.approx(0.4)
+        assert task.locality == 1
+
+    def test_stage_windowing(self):
+        telem = StepTelemetry("h0", window=10)
+        assert telem.stage_id_for(3) == telem.stage_id_for(9)
+        assert telem.stage_id_for(9) != telem.stage_id_for(10)
+
+    def test_gc_timer(self):
+        import gc
+
+        with GcTimer() as t:
+            gc.collect()
+            assert t.total >= 0.0
+            val = t.take()
+            assert t.total == 0.0 and val >= 0.0
+
+
+class TestInjectionSchedule:
+    def test_overlap(self):
+        assert overlap(0, 10, 5, 20) == 5
+        assert overlap(0, 10, 20, 30) == 0
+
+    def test_intermittent(self):
+        sched = InjectionSchedule.intermittent("slave1", "cpu", 100.0, period=25, burst=10)
+        assert len(sched) == 4
+        assert sched.active("slave1", "cpu", 5.0) == pytest.approx(0.9)
+        assert sched.active("slave1", "cpu", 15.0) == 0.0
+        assert sched.active("slave2", "cpu", 5.0) == 0.0
+
+    def test_affected(self):
+        sched = InjectionSchedule([Injection("n1", "disk", 10, 20)])
+        assert sched.affected("n1", "disk", 15, 30)
+        assert not sched.affected("n1", "cpu", 15, 30)
+        assert not sched.affected("n1", "disk", 21, 30)
+
+
+class TestSimCluster:
+    def test_deterministic(self):
+        r1 = SimCluster(seed=7).run()
+        r2 = SimCluster(seed=7).run()
+        assert r1.job_duration == r2.job_duration
+        t1 = [t.to_json() for s in r1.trace.stages() for t in s.tasks]
+        t2 = [t.to_json() for s in r2.trace.stages() for t in s.tasks]
+        assert t1 == t2
+
+    def test_injection_slows_job(self):
+        base = SimCluster(seed=3).run()
+        sched = InjectionSchedule.intermittent("slave1", "disk", base.job_duration)
+        slowed = SimCluster(seed=3).run(sched)
+        assert slowed.job_duration > base.job_duration
+
+    def test_injection_found_by_bigroots(self):
+        cluster = SimCluster(seed=11, profile="naivebayes_large")
+        base = cluster.run()
+        sched = InjectionSchedule.intermittent(
+            "slave2", "cpu", base.job_duration, period=30, burst=15
+        )
+        res = SimCluster(seed=11, profile="naivebayes_large").run(sched)
+        an = BigRootsAnalyzer(SPARK_FEATURES, timelines=res.timelines)
+        found = found_set(an.root_causes(res.trace))
+        cpu_found = {(t, f) for (t, f) in found if f == "cpu"}
+        # Some injected-cpu stragglers must be attributed to cpu (AG truth —
+        # organic co-runner contention can legitimately fire on other nodes).
+        hits = cpu_found & res.truth_ag
+        assert hits
+        for task_id, _ in hits:
+            stage = res.trace.stage(task_id.split("/")[0])
+            node = next(t.node for t in stage.tasks if t.task_id == task_id)
+            assert node == "slave2"
+
+    def test_ag_truth_only_on_injected_node(self):
+        sched = InjectionSchedule([Injection("slave1", "cpu", 0.0, 50.0)])
+        res = SimCluster(seed=5).run(sched)
+        assert res.truth_ag  # the injection did affect tasks
+        for task_id, feat in res.truth_ag:
+            assert feat == "cpu"
+            stage = res.trace.stage(task_id.split("/")[0])
+            node = next(t.node for t in stage.tasks if t.task_id == task_id)
+            assert node == "slave1"
+        # organic truth is disjoint from AG truth features here
+        assert res.truth == res.truth_ag | res.truth_organic
+
+    def test_organic_truth_recorded(self):
+        res = SimCluster(seed=1, profile="kmeans").run()
+        feats = {f for _, f in res.truth_organic}
+        assert "shuffle_read_bytes" in feats  # kmeans is shuffle-skewed
