@@ -3,9 +3,21 @@ scale/kernel benches.  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table3 fig8
+    PYTHONPATH=src python -m benchmarks.run --check    # regression gate
+
+``--check`` compares the produced rows against the committed
+``BENCH_baseline.json`` (same directory) and exits non-zero if any
+baselined row regresses more than ``_tolerance``× (default 2×) — the CI
+gate for the hot analyzer path (``scale/analyzer_16384_hosts``).  With no
+bench names given, ``--check`` runs the benches the baseline covers and a
+baseline row the run failed to produce is itself a failure (loud gate
+misconfiguration); with explicit bench names, only the baseline rows
+those benches produced are compared.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 
 from . import paper_tables, scale_bench
@@ -23,20 +35,63 @@ BENCHES = {
     "e2e_train": scale_bench.e2e_train_bench,
 }
 
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
+
+
+def _load_baseline() -> tuple[dict[str, float], float]:
+    with open(BASELINE_PATH) as f:
+        obj = json.load(f)
+    tolerance = float(obj.pop("_tolerance", 2.0))
+    rows = {k: float(v) for k, v in obj.items() if not k.startswith("_")}
+    return rows, tolerance
+
+
+def _check(rows: dict[str, float], require_all: bool) -> int:
+    baseline, tolerance = _load_baseline()
+    failures = 0
+    for name, base_us in sorted(baseline.items()):
+        got = rows.get(name)
+        if got is None:
+            if require_all:
+                print(f"CHECK,{name},MISSING (bench did not produce this row)")
+                failures += 1
+            continue
+        ratio = got / base_us if base_us > 0 else float("inf")
+        verdict = "OK" if ratio <= tolerance else "REGRESSION"
+        print(f"CHECK,{name},{verdict} got={got:.1f}us "
+              f"baseline={base_us:.1f}us ratio={ratio:.2f}x limit={tolerance:.1f}x")
+        if verdict != "OK":
+            failures += 1
+    return failures
+
 
 def main() -> None:
-    wanted = sys.argv[1:] or list(BENCHES)
+    argv = list(sys.argv[1:])
+    check = "--check" in argv
+    if check:
+        argv.remove("--check")
+    if argv:
+        wanted = argv
+    elif check:
+        wanted = ["analyzer_scale"]
+    else:
+        wanted = list(BENCHES)
+
     print("name,us_per_call,derived")
     failures = 0
+    rows: dict[str, float] = {}
     for name in wanted:
         fn = BENCHES[name]
         try:
             _rows, csv_rows = fn()
             for row_name, us, derived in csv_rows:
+                rows[row_name] = us
                 print(f"{row_name},{us:.1f},{derived}")
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},0,ERROR={type(e).__name__}:{e}")
+    if check:
+        failures += _check(rows, require_all=not argv)
     if failures:
         raise SystemExit(1)
 

@@ -12,55 +12,120 @@ import numpy as np  # noqa: E402
 from repro.core import (  # noqa: E402
     BigRootsAnalyzer,
     JAX_FEATURES,
+    StageFrame,
     StageRecord,
     TaskRecord,
+    TraceStore,
 )
 
 from .common import Timer  # noqa: E402
 
 
-def _synthetic_stage(n_hosts: int, seed: int = 0) -> StageRecord:
-    """One step window across n_hosts hosts (per-host step TaskRecords)."""
+def _synthetic_columns(n_hosts: int, seed: int = 0) -> dict:
+    """One step window across n_hosts hosts, as raw per-host columns."""
     rng = np.random.default_rng(seed)
     dur = rng.lognormal(mean=0.0, sigma=0.08, size=n_hosts) * 10.0
     slow = rng.choice(n_hosts, size=max(n_hosts // 100, 1), replace=False)
     dur[slow] *= 2.0
-    tasks = []
-    for i in range(n_hosts):
-        feats = {
-            "cpu": float(rng.uniform(0.1, 0.3)),
-            "disk": float(rng.uniform(0.0, 0.2)),
-            "network": float(rng.uniform(1e5, 1e6)),
-            "read_bytes": float(rng.uniform(0.9, 1.1) * 64e6),
-            "gc_time": float(rng.uniform(0, 0.05)),
-            "data_load_time": float(rng.uniform(0, 0.4)),
-            "h2d_time": float(rng.uniform(0, 0.1)),
-        }
-        if i in slow:
-            feats["cpu"] = 0.95
-        tasks.append(TaskRecord(
-            task_id=f"h{i}/s0", stage_id="s0", node=f"h{i}",
-            start=0.0, end=float(dur[i]), features=feats,
-        ))
+    cpu = rng.uniform(0.1, 0.3, n_hosts)
+    cpu[slow] = 0.95
+    return {
+        "task_ids": [f"h{i}/s0" for i in range(n_hosts)],
+        "nodes": [f"h{i}" for i in range(n_hosts)],
+        "starts": np.zeros(n_hosts),
+        "ends": dur,
+        "features": {
+            "cpu": cpu,
+            "disk": rng.uniform(0.0, 0.2, n_hosts),
+            "network": rng.uniform(1e5, 1e6, n_hosts),
+            "read_bytes": rng.uniform(0.9, 1.1, n_hosts) * 64e6,
+            "gc_time": rng.uniform(0, 0.05, n_hosts),
+            "data_load_time": rng.uniform(0, 0.4, n_hosts),
+            "h2d_time": rng.uniform(0, 0.1, n_hosts),
+        },
+    }
+
+
+def _feature_dicts(cols: dict) -> list[dict]:
+    names = list(cols["features"])
+    rows = zip(*(cols["features"][k] for k in names))
+    return [dict(zip(names, map(float, row))) for row in rows]
+
+
+def _as_stage_record(cols: dict) -> StageRecord:
+    """The dataclass (AoS) representation: one TaskRecord per host."""
+    tasks = [
+        TaskRecord(task_id=tid, stage_id="s0", node=node,
+                   start=float(t0), end=float(t1), features=feats)
+        for tid, node, t0, t1, feats in zip(
+            cols["task_ids"], cols["nodes"], cols["starts"], cols["ends"],
+            _feature_dicts(cols))
+    ]
     return StageRecord("s0", tasks)
 
 
+def _as_frame(cols: dict) -> StageFrame:
+    """The columnar (SoA) representation: one ingest, zero dataclasses."""
+    return StageFrame.from_columns(
+        "s0", JAX_FEATURES, cols["task_ids"], cols["nodes"],
+        cols["starts"], cols["ends"], feature_columns=cols["features"],
+    )
+
+
 def analyzer_scale():
-    """Vectorized analyzer wall time per step-window vs cluster size."""
+    """Analyzer wall time per step-window vs cluster size.
+
+    ``scale/analyzer_N_hosts`` is the production path: a prebuilt columnar
+    StageFrame analyzed in place (ingest excluded — the frame is built once
+    when telemetry arrives).  ``*_dataclass`` rows analyze the same window
+    through the TaskRecord path (per-call SoA conversion included), and the
+    ``ingest_analyze`` pair compares the two end to end from raw samples.
+    """
     rows, csv = [], []
     an = BigRootsAnalyzer(JAX_FEATURES)
     for n_hosts in (256, 1024, 4096, 16384):
-        stage = _synthetic_stage(n_hosts)
-        an.analyze_stage(stage)  # warm
-        reps = 5
+        cols = _synthetic_columns(n_hosts)
+        frame = _as_frame(cols)
+        an.analyze_stage(frame)  # warm
+        reps = 20
         with Timer() as t:
             for _ in range(reps):
-                sa = an.analyze_stage(stage)
+                sa = an.analyze_stage(frame)
         per_call = t.us / reps
         rows.append((n_hosts, per_call, len(sa.straggler_ids)))
         csv.append((f"scale/analyzer_{n_hosts}_hosts", per_call,
                     f"stragglers={len(sa.straggler_ids)};"
                     f"per_host_ns={1000 * per_call / n_hosts:.0f}"))
+
+    # Frame-vs-dataclass comparison at the largest size.
+    n_hosts = 16384
+    cols = _synthetic_columns(n_hosts)
+    stage = _as_stage_record(cols)
+    with Timer() as t:
+        sa = an.analyze_stage(stage)
+    csv.append((f"scale/analyzer_{n_hosts}_hosts_dataclass", t.us,
+                f"stragglers={len(sa.straggler_ids)};per_call_conversion"))
+
+    feats = _feature_dicts(cols)
+    with Timer() as t:
+        store = TraceStore(JAX_FEATURES)
+        for tid, node, t1, f in zip(cols["task_ids"], cols["nodes"],
+                                    cols["ends"], feats):
+            store.add_row(tid, "s0", node, 0.0, float(t1), features=f)
+        an.analyze(store)
+    csv.append((f"scale/ingest_analyze_{n_hosts}_frame", t.us,
+                "columnar add_row ingest + analyze"))
+
+    with Timer() as t:
+        tasks = [
+            TaskRecord(task_id=tid, stage_id="s0", node=node,
+                       start=0.0, end=float(t1), features=f)
+            for tid, node, t1, f in zip(cols["task_ids"], cols["nodes"],
+                                        cols["ends"], feats)
+        ]
+        an.analyze_stage(StageRecord("s0", tasks))
+    csv.append((f"scale/ingest_analyze_{n_hosts}_dataclass", t.us,
+                "TaskRecord ingest + analyze"))
     return rows, csv
 
 

@@ -4,6 +4,7 @@ Public API:
 
     from repro.core import (
         TaskRecord, StageRecord, Trace,
+        StageFrame, TraceStore,
         FeatureKind, FeatureSpec, FeatureSchema, SPARK_FEATURES, JAX_FEATURES,
         BigRootsAnalyzer, BigRootsThresholds, RootCause, StageAnalysis,
         PCCAnalyzer, PCCThresholds,
@@ -29,6 +30,7 @@ from .features import (
     FeatureSpec,
     get_schema,
 )
+from .frame import StageFrame, TraceStore
 from .pcc import PCCAnalyzer, PCCThresholds
 from .records import StageRecord, TaskRecord, Trace
 from .report import TraceSummary, per_stage_table, render_markdown, summarize
@@ -50,10 +52,12 @@ __all__ = [
     "RootCause",
     "SPARK_FEATURES",
     "StageAnalysis",
+    "StageFrame",
     "StageRecord",
     "TaskRecord",
     "TimelineStore",
     "Trace",
+    "TraceStore",
     "TraceSummary",
     "auc",
     "evaluate",

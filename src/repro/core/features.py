@@ -18,6 +18,8 @@ from __future__ import annotations
 import enum
 from dataclasses import dataclass
 
+import numpy as np
+
 
 class FeatureKind(enum.Enum):
     NUMERICAL = "numerical"
@@ -47,6 +49,14 @@ class FeatureSchema:
         self._by_name = {s.name: s for s in specs}
         if len(self._by_name) != len(self._specs):
             raise ValueError("duplicate feature names in schema")
+        self._col_index = {s.name: j for j, s in enumerate(self._specs)}
+        self._kind_cols = {
+            kind: np.array(
+                [j for j, s in enumerate(self._specs) if s.kind is kind],
+                dtype=np.int64,
+            )
+            for kind in FeatureKind
+        }
 
     def __iter__(self):
         return iter(self._specs)
@@ -63,6 +73,29 @@ class FeatureSchema:
     @property
     def names(self) -> list[str]:
         return [s.name for s in self._specs]
+
+    @property
+    def specs(self) -> list[FeatureSpec]:
+        return list(self._specs)
+
+    @property
+    def signature(self) -> tuple[tuple[str, FeatureKind], ...]:
+        """(name, kind) pairs — what normalization/gating semantics depend
+        on.  Two schemas with equal signatures are interchangeable for
+        analysis (guidance text may differ)."""
+        return tuple((s.name, s.kind) for s in self._specs)
+
+    @property
+    def col_index(self) -> dict[str, int]:
+        """Feature name → column position in the schema-ordered matrix."""
+        return self._col_index
+
+    def spec_at(self, j: int) -> FeatureSpec:
+        return self._specs[j]
+
+    def cols_of_kind(self, kind: FeatureKind) -> np.ndarray:
+        """Column indices of all features of ``kind`` (int64, schema order)."""
+        return self._kind_cols[kind]
 
     def of_kind(self, kind: FeatureKind) -> list[FeatureSpec]:
         return [s for s in self._specs if s.kind is kind]

@@ -15,6 +15,10 @@ feature and task duration is not linearly correlated and features may
 correlate with each other" (longer tasks mechanically accumulate more GC/
 serialization time, so those features correlate with duration for *every*
 straggler).
+
+Shares the columnar :class:`~repro.core.frame.StageFrame` substrate with
+the BigRoots analyzer (``StageFrame.pcc_matrix`` is the raw-metric view),
+so both methods read the same ingest-once float64 block.
 """
 from __future__ import annotations
 
@@ -23,28 +27,9 @@ from dataclasses import dataclass
 import numpy as np
 
 from .features import FeatureKind, FeatureSchema
-from .records import StageRecord, Trace
+from .frame import StageFrame, as_frame
+from .records import StageRecord
 from .straggler import DEFAULT_STRAGGLER_THRESHOLD, straggler_mask
-
-
-def raw_features(tasks, schema: FeatureSchema):
-    """[tasks × features] matrix of raw metrics (numerical scaled by the
-    stage mean for cross-feature comparability; time/resource absolute)."""
-    n = len(tasks)
-    names = schema.names
-    F = np.zeros((n, len(names)), dtype=np.float64)
-    durations = np.array([max(t.duration, 1e-12) for t in tasks])
-    for i, t in enumerate(tasks):
-        for j, name in enumerate(names):
-            if name == "locality":
-                F[i, j] = float(t.locality)
-            else:
-                F[i, j] = float(t.features.get(name, 0.0))
-    for j, spec in enumerate(schema):
-        if spec.kind is FeatureKind.NUMERICAL:
-            mean = F[:, j].mean() if n else 0.0
-            F[:, j] = F[:, j] / mean if mean > 0 else 0.0
-    return F, durations
 
 
 @dataclass(frozen=True)
@@ -59,19 +44,20 @@ class PCCAnalyzer:
         self.schema = schema
         self.thresholds = thresholds
 
-    def root_cause_set(self, trace: Trace) -> set[tuple[str, str]]:
+    def root_cause_set(self, trace) -> set[tuple[str, str]]:
         out: set[tuple[str, str]] = set()
         for stage in trace.stages():
             out |= self.analyze_stage(stage)
         return out
 
-    def analyze_stage(self, stage: StageRecord) -> set[tuple[str, str]]:
-        tasks = stage.tasks
-        n = len(tasks)
+    def analyze_stage(self, stage: StageRecord | StageFrame) -> set[tuple[str, str]]:
+        frame = as_frame(stage, self.schema)
+        n = len(frame)
         if n < 2:
             return set()
         th = self.thresholds
-        F, durations = raw_features(tasks, self.schema)
+        F = frame.pcc_matrix()
+        durations = np.maximum(frame.durations, 1e-12)
         smask = straggler_mask(durations, th.straggler)
         if not smask.any():
             return set()
@@ -88,12 +74,17 @@ class PCCAnalyzer:
         with np.errstate(invalid="ignore"):
             q = np.quantile(F, th.max_quantile, axis=0)
 
-        found: set[tuple[str, str]] = set()
+        # Eq. 8 as one mask: straggler row AND correlated column AND
+        # top-quantile value.  PCC treats locality as numeric-incapable;
+        # the paper omits it.
+        fired = smask[:, None] & (np.abs(rho) > th.pearson)[None, :] & (F > q[None, :])
+        dcols = self.schema.cols_of_kind(FeatureKind.DISCRETE)
+        if dcols.size:
+            fired[:, dcols] = False
+
         names = self.schema.names
-        for i in np.nonzero(smask)[0]:
-            for j, spec in enumerate(self.schema):
-                if spec.kind is FeatureKind.DISCRETE:
-                    continue  # PCC treats locality as numeric-incapable; paper omits it
-                if abs(rho[j]) > th.pearson and F[i, j] > q[j]:
-                    found.add((tasks[int(i)].task_id, names[j]))
-        return found
+        ii, jj = np.nonzero(fired)
+        return {
+            (frame.task_ids[i], names[j])
+            for i, j in zip(ii.tolist(), jj.tolist())
+        }

@@ -27,14 +27,20 @@ def make_prefill_step(model: Model) -> Callable:
 
 
 def make_decode_step(model: Model, temperature: float = 0.0) -> Callable:
-    def decode_step(params, tokens, cache, key):
-        logits, cache = model.decode(params, tokens, cache)
-        logits = logits[:, 0, :]
-        if temperature > 0:
-            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        return nxt.astype(jnp.int32)[:, None], cache
+    """Greedy decode takes no PRNG key at all: threading a dead key through
+    the jitted step costs a host-side ``jax.random.split`` per token."""
+    if temperature > 0:
+        def decode_step(params, tokens, cache, key):
+            logits, cache = model.decode(params, tokens, cache)
+            nxt = jax.random.categorical(
+                key, logits[:, 0, :] / temperature, axis=-1
+            )
+            return nxt.astype(jnp.int32)[:, None], cache
+    else:
+        def decode_step(params, tokens, cache):
+            logits, cache = model.decode(params, tokens, cache)
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1)
+            return nxt.astype(jnp.int32)[:, None], cache
 
     return decode_step
 
@@ -64,11 +70,19 @@ class ServeEngine:
         self.params = params
         self.max_len = max_len
         self.batch_size = batch_size
+        self.temperature = temperature
         self.telemetry = telemetry
         self.eos_id = eos_id
         self._prefill = jax.jit(make_prefill_step(model))
         self._decode = jax.jit(make_decode_step(model, temperature))
         self._key = jax.random.key(0)
+
+    def _decode_once(self, nxt, cache):
+        """One decode step; splits a PRNG key only when sampling."""
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            return self._decode(self.params, nxt, cache, sub)
+        return self._decode(self.params, nxt, cache)
 
     def _pad_batch(self, requests: list[Request]) -> np.ndarray:
         """Left-align prompts into a rectangular [B, S_max] batch."""
@@ -99,13 +113,11 @@ class ServeEngine:
             if self.telemetry is not None:
                 with self.telemetry.step(step_offset + step) as scope:
                     with scope.phase("compute"):
-                        self._key, sub = jax.random.split(self._key)
-                        nxt, cache = self._decode(self.params, nxt, cache, sub)
+                        nxt, cache = self._decode_once(nxt, cache)
                         jax.block_until_ready(nxt)
                     scope.add("read_bytes", float(nxt.size * 4))
             else:
-                self._key, sub = jax.random.split(self._key)
-                nxt, cache = self._decode(self.params, nxt, cache, sub)
+                nxt, cache = self._decode_once(nxt, cache)
             out = np.asarray(nxt[:, 0])
             for i, r in enumerate(requests):
                 if r.done or len(r.output) >= r.max_new_tokens:

@@ -15,7 +15,8 @@ import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
-from ..core.records import TaskRecord, Trace
+from ..core.features import JAX_FEATURES, FeatureSchema
+from ..core.frame import TraceStore
 from .timeline import ResourceTimeline
 
 
@@ -88,7 +89,13 @@ class StepScope:
 
 
 class StepTelemetry:
-    """Per-host TaskRecord emitter.
+    """Per-host step-record emitter.
+
+    Steps ingest straight into a columnar
+    :class:`~repro.core.frame.TraceStore` (``self.trace``) — no per-step
+    dataclass materialization on the hot path; ``trace`` still supports the
+    full Trace API (``stages()``/``stage()``/``dump_jsonl``) and stages
+    expose a ``TaskRecord`` view for compatibility.
 
     Usage::
 
@@ -117,13 +124,15 @@ class StepTelemetry:
         window: int = 1,
         clock=time.time,
         gc_timer: GcTimer | None = None,
+        schema: FeatureSchema | None = None,
     ) -> None:
         self.node = node
         self.timeline = timeline
         self.window = max(int(window), 1)
         self.clock = clock
         self.gc_timer = gc_timer
-        self.trace = Trace()
+        self.schema = schema or JAX_FEATURES
+        self.trace = TraceStore(self.schema)
 
     def stage_id_for(self, step: int) -> str:
         """Stage = window of `window` consecutive steps (peer pooling)."""
@@ -157,20 +166,19 @@ class StepTelemetry:
                 if val is not None:
                     features[metric] = val
 
-        self.trace.add_task(
-            TaskRecord(
-                task_id=f"{self.node}/step{scope.step:06d}",
-                stage_id=self.stage_id_for(scope.step),
-                node=self.node,
-                start=scope.start,
-                end=scope.end,
-                locality=scope.locality,
-                features=features,
-            )
+        self.trace.add_row(
+            task_id=f"{self.node}/step{scope.step:06d}",
+            stage_id=self.stage_id_for(scope.step),
+            node=self.node,
+            start=scope.start,
+            end=scope.end,
+            locality=scope.locality,
+            features=features,
         )
 
     # -- merging (multi-host traces are concatenated by the launcher) -----------
-    def merge_into(self, trace: Trace) -> None:
+    def merge_into(self, trace) -> None:
+        """Append this host's records into ``trace`` (Trace or TraceStore)."""
         for stage in self.trace.stages():
             for task in stage.tasks:
                 trace.add_task(task)

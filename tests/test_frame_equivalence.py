@@ -1,0 +1,373 @@
+"""Randomized property tests for the columnar substrate.
+
+The frame-based vectorized analyzer must produce the *identical*
+(task, feature) root-cause set as ``repro.core.reference`` (the literal
+loop transcription of paper §III) on randomized traces — including
+resource timelines / Eq. 6 edge detection and empty-peer-group corner
+cases — whether the stage arrives as dataclasses (StageRecord), a
+StageFrame, or through TraceStore columnar ingest.  Plus: TraceStore /
+StageFrame round-trip fidelity and batched timeline query equivalence.
+
+(numpy-RNG randomized rather than hypothesis-driven: the container has no
+``hypothesis`` wheel, and these runs must stay deterministic in CI.)
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BigRootsAnalyzer,
+    BigRootsThresholds,
+    PCCAnalyzer,
+    SPARK_FEATURES,
+    StageFrame,
+    StageRecord,
+    TaskRecord,
+    Trace,
+    TraceStore,
+    found_set,
+)
+from repro.core.reference import reference_root_causes
+from repro.telemetry import ResourceTimeline
+
+METRICS = ("cpu", "disk", "network")
+
+
+def random_stage(rng: np.random.Generator, n: int | None = None,
+                 n_nodes: int | None = None) -> StageRecord:
+    n = n if n is not None else int(rng.integers(2, 41))
+    n_nodes = n_nodes if n_nodes is not None else int(rng.integers(1, 7))
+    tasks = []
+    for i in range(n):
+        start = float(rng.uniform(0.0, 30.0))
+        dur = float(rng.uniform(0.5, 60.0))
+        feats = {
+            "cpu": float(rng.uniform(0, 1)),
+            "disk": float(rng.uniform(0, 1)),
+            "network": float(rng.uniform(0, 1e8)),
+            "read_bytes": float(rng.uniform(0, 1e9)),
+            "shuffle_read_bytes": float(rng.uniform(0, 1e9)),
+            "jvm_gc_time": float(rng.uniform(0, dur)),
+        }
+        # Sometimes drop a feature entirely (missing → 0.0 semantics).
+        if rng.random() < 0.2:
+            del feats[list(feats)[int(rng.integers(len(feats)))]]
+        tasks.append(TaskRecord(
+            task_id=f"t{i}", stage_id="s", node=f"n{int(rng.integers(n_nodes))}",
+            start=start, end=start + dur,
+            locality=int(rng.choice([0, 0, 0, 1, 2])),
+            features=feats,
+        ))
+    return StageRecord("s", tasks)
+
+
+def random_timeline(rng: np.random.Generator, stage: StageRecord) -> ResourceTimeline:
+    """1 Hz-ish samples per (node, metric), with gaps and missing series so
+    both edge-detection branches (filter applied / no-samples skip) fire."""
+    tl = ResourceTimeline()
+    t_hi = max(t.end for t in stage.tasks) + 10.0
+    for node in {t.node for t in stage.tasks}:
+        for metric in METRICS:
+            if rng.random() < 0.2:
+                continue  # missing series → window_mean None → keep
+            ts = np.arange(-10.0, t_hi, float(rng.uniform(0.7, 2.0)))
+            keep = rng.random(ts.size) > 0.3  # gaps → some empty windows
+            samples = [(float(t), float(rng.uniform(0, 1))) for t in ts[keep]]
+            rng.shuffle(samples)  # out-of-order ingest must not matter
+            tl.record_many(node, metric, samples)
+    return tl
+
+
+def random_thresholds(rng: np.random.Generator) -> BigRootsThresholds:
+    return BigRootsThresholds(
+        quantile=float(rng.choice([0.5, 0.7, 0.8, 0.9, 0.95])),
+        peer_mean=float(rng.choice([1.0, 1.25, 1.5, 2.0])),
+        edge_filter=float(rng.choice([0.3, 0.5, 0.8])),
+        edge_width=float(rng.choice([1.0, 3.0, 5.0])),
+    )
+
+
+class TestReferenceEquivalence:
+    def test_randomized_with_timelines(self):
+        """Frame fast path ≡ literal Eq. 5-7 transcription, edge detection
+        included (both read the same ResourceTimeline)."""
+        for seed in range(60):
+            rng = np.random.default_rng(seed)
+            stage = random_stage(rng)
+            tl = random_timeline(rng, stage)
+            th = random_thresholds(rng)
+            an = BigRootsAnalyzer(SPARK_FEATURES, th, timelines=tl)
+            got = found_set(an.analyze_stage(stage).root_causes)
+            want = reference_root_causes(stage, SPARK_FEATURES, th, timelines=tl)
+            assert got == want, f"seed={seed}"
+
+    def test_ingest_paths_agree(self):
+        """StageRecord, prebuilt StageFrame, and TraceStore.add_row ingest
+        must all yield the same findings."""
+        for seed in range(20):
+            rng = np.random.default_rng(1000 + seed)
+            stage = random_stage(rng)
+            tl = random_timeline(rng, stage)
+            an = BigRootsAnalyzer(SPARK_FEATURES, timelines=tl)
+            via_record = found_set(an.analyze_stage(stage).root_causes)
+            frame = StageFrame.from_tasks("s", stage.tasks, SPARK_FEATURES)
+            via_frame = found_set(an.analyze_stage(frame).root_causes)
+            store = TraceStore(SPARK_FEATURES)
+            for t in stage.tasks:
+                store.add_row(t.task_id, t.stage_id, t.node, t.start, t.end,
+                              t.locality, t.features)
+            via_store = found_set(an.root_causes(store))
+            assert via_record == via_frame == via_store, f"seed={seed}"
+
+    def test_single_node_stage_empty_inter_peers(self):
+        """All tasks on one node → inter peer group empty for everyone;
+        only the intra observation can fire."""
+        for seed in range(15):
+            rng = np.random.default_rng(2000 + seed)
+            stage = random_stage(rng, n_nodes=1)
+            th = random_thresholds(rng)
+            an = BigRootsAnalyzer(SPARK_FEATURES, th)
+            got = found_set(an.analyze_stage(stage).root_causes)
+            want = reference_root_causes(stage, SPARK_FEATURES, th)
+            assert got == want, f"seed={seed}"
+
+    def test_singleton_node_straggler_empty_intra_peers(self):
+        """A straggler alone on its node has no intra peers — the intra gate
+        must not fire from an empty group (NaN mean)."""
+        tasks = [TaskRecord(f"t{i}", "s", f"n{i % 3}", 0.0, 10.0,
+                            features={"read_bytes": 100.0}) for i in range(12)]
+        tasks.append(TaskRecord("t99", "s", "lonely", 0.0, 30.0,
+                                features={"read_bytes": 900.0}))
+        stage = StageRecord("s", tasks)
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        got = found_set(an.analyze_stage(stage).root_causes)
+        want = reference_root_causes(stage, SPARK_FEATURES)
+        assert got == want
+        hits = [c for c in an.analyze_stage(stage).root_causes
+                if c.key == ("t99", "read_bytes")]
+        assert hits and hits[0].peer_groups == ("inter",)
+
+    def test_two_tasks_and_empty_stage(self):
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        assert an.analyze_stage(StageRecord("s", [])).num_tasks == 0
+        rng = np.random.default_rng(7)
+        for seed in range(10):
+            stage = random_stage(np.random.default_rng(3000 + seed), n=2)
+            got = found_set(an.analyze_stage(stage).root_causes)
+            want = reference_root_causes(stage, SPARK_FEATURES)
+            assert got == want
+
+    def test_scalar_window_mean_fallback_matches_batched(self):
+        """A protocol-minimal TimelineStore (only ``window_mean``) must take
+        the per-query fallback branch and still match the reference."""
+
+        class MinimalStore:
+            def __init__(self, tl):
+                self._tl = tl
+
+            def window_mean(self, node, metric, t0, t1):
+                return self._tl.window_mean(node, metric, t0, t1)
+
+        for seed in range(20):
+            rng = np.random.default_rng(5000 + seed)
+            stage = random_stage(rng)
+            tl = random_timeline(rng, stage)
+            th = random_thresholds(rng)
+            minimal = MinimalStore(tl)
+            assert not hasattr(minimal, "window_means")
+            got = found_set(
+                BigRootsAnalyzer(SPARK_FEATURES, th, timelines=minimal)
+                .analyze_stage(stage).root_causes
+            )
+            batched = found_set(
+                BigRootsAnalyzer(SPARK_FEATURES, th, timelines=tl)
+                .analyze_stage(stage).root_causes
+            )
+            want = reference_root_causes(stage, SPARK_FEATURES, th, timelines=minimal)
+            assert got == batched == want, f"seed={seed}"
+
+    def test_same_names_different_kinds_reingested(self):
+        """as_frame must not pass a frame through when a schema reclassifies
+        a feature's kind under the same name (normalization would split)."""
+        from repro.core import FeatureSchema, FeatureSpec
+        from repro.core.features import FeatureKind
+
+        reclassified = FeatureSchema([
+            FeatureSpec(s.name,
+                        FeatureKind.NUMERICAL if s.name == "jvm_gc_time" else s.kind)
+            for s in SPARK_FEATURES
+        ])
+        rng = np.random.default_rng(42)
+        stage = random_stage(rng)
+        frame = StageFrame.from_tasks("s", stage.tasks, SPARK_FEATURES)
+        an = BigRootsAnalyzer(reclassified)
+        got = found_set(an.analyze_stage(frame).root_causes)
+        want = reference_root_causes(stage, reclassified)
+        assert got == want
+
+    def test_pcc_frame_matches_record_path(self):
+        for seed in range(15):
+            rng = np.random.default_rng(4000 + seed)
+            stage = random_stage(rng)
+            an = PCCAnalyzer(SPARK_FEATURES)
+            frame = StageFrame.from_tasks("s", stage.tasks, SPARK_FEATURES)
+            assert an.analyze_stage(stage) == an.analyze_stage(frame), f"seed={seed}"
+
+
+class TestTraceStore:
+    def test_taskrecord_view_roundtrip(self):
+        rng = np.random.default_rng(0)
+        stage = random_stage(rng, n=15)
+        store = TraceStore(SPARK_FEATURES, stage.tasks)
+        assert store.stage("s").tasks == stage.tasks
+
+    def test_jsonl_roundtrip_with_extras(self, tmp_path):
+        """Features outside the schema (and explicit 0.0 values) survive the
+        columnar representation and the JSONL round trip exactly."""
+        t = TaskRecord("t0", "s", "n0", 1.0, 5.0, locality=2,
+                       features={"cpu": 0.0, "weird_counter": 42.0})
+        store = TraceStore(SPARK_FEATURES, [t])
+        p = str(tmp_path / "trace.jsonl")
+        store.dump_jsonl(p)
+        # Loadable by both the columnar store and the dataclass Trace.
+        again = TraceStore.load_jsonl(p, SPARK_FEATURES)
+        assert again.stage("s").tasks == [t]
+        assert Trace.load_jsonl(p).stage("s").tasks == [t]
+
+    def test_matches_trace_semantics(self, tmp_path):
+        rng = np.random.default_rng(1)
+        stage = random_stage(rng, n=10)
+        trace = Trace([stage])
+        store = TraceStore.from_trace(trace, SPARK_FEATURES)
+        assert store.num_tasks == trace.num_tasks
+        assert store.stage_ids() == trace.stage_ids()
+        p1, p2 = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+        trace.dump_jsonl(p1)
+        store.dump_jsonl(p2)
+        assert (
+            sorted(open(p1).read().splitlines())
+            == sorted(open(p2).read().splitlines())
+        )
+        assert store.to_trace().num_tasks == trace.num_tasks
+
+    def test_frame_grows_past_initial_capacity(self):
+        store = TraceStore(SPARK_FEATURES)
+        for i in range(100):  # > _StageBuilder._INITIAL, several growth steps
+            store.add_row(f"t{i}", "s", f"n{i % 4}", 0.0, 1.0 + i,
+                          features={"cpu": float(i)})
+        frame = store.stage("s")
+        assert len(frame) == 100
+        np.testing.assert_allclose(
+            frame.raw[:, SPARK_FEATURES.col_index["cpu"]], np.arange(100.0)
+        )
+
+    def test_sealed_frame_stable_across_later_appends(self):
+        store = TraceStore(SPARK_FEATURES)
+        store.add_row("t0", "s", "n0", 0.0, 10.0, features={"cpu": 0.5})
+        frame0 = store.stage("s")
+        d0 = frame0.durations.copy()
+        for i in range(50):
+            store.add_row(f"t{i+1}", "s", "n1", 0.0, 99.0, features={"cpu": 0.9})
+        np.testing.assert_array_equal(frame0.durations, d0)
+        assert len(store.stage("s")) == 51
+
+
+class TestTimelineBatched:
+    def test_window_means_matches_scalar(self):
+        rng = np.random.default_rng(5)
+        tl = ResourceTimeline()
+        for node in ("a", "b"):
+            for metric in ("cpu", "disk"):
+                samples = [(float(t), float(rng.uniform()))
+                           for t in rng.uniform(0, 100, 200)]
+                tl.record_many(node, metric, samples)
+        nodes, metrics, t0s, t1s = [], [], [], []
+        for _ in range(100):
+            nodes.append(str(rng.choice(["a", "b", "missing"])))
+            metrics.append(str(rng.choice(["cpu", "disk", "network"])))
+            t0 = float(rng.uniform(-10, 110))
+            t0s.append(t0)
+            t1s.append(t0 + float(rng.uniform(0, 5)))
+        batched = tl.window_means(nodes, metrics, np.array(t0s), np.array(t1s))
+        for i in range(100):
+            scalar = tl.window_mean(nodes[i], metrics[i], t0s[i], t1s[i])
+            if scalar is None:
+                assert np.isnan(batched[i])
+            else:
+                assert batched[i] == pytest.approx(scalar)
+
+    def test_record_many_out_of_order_bulk_sorts_once(self):
+        """Out-of-order bulk merge (the old O(n²) insert case) must yield the
+        same series/queries as sorted ingestion."""
+        rng = np.random.default_rng(6)
+        ts = rng.uniform(0, 1000, 5000)
+        vals = rng.uniform(0, 1, 5000)
+        shuffled = ResourceTimeline()
+        order = rng.permutation(5000)
+        shuffled.record_many("n", "cpu", zip(ts[order], vals[order]))
+        srt = ResourceTimeline()
+        idx = np.argsort(ts)
+        srt.record_many("n", "cpu", zip(ts[idx], vals[idx]))
+        got_ts, got_vals = shuffled.series("n", "cpu")
+        want_ts, want_vals = srt.series("n", "cpu")
+        np.testing.assert_allclose(got_ts, want_ts)
+        np.testing.assert_allclose(sorted(got_vals), sorted(want_vals))
+        for lo in (0.0, 100.0, 999.0):
+            assert shuffled.window_mean("n", "cpu", lo, lo + 50) == pytest.approx(
+                srt.window_mean("n", "cpu", lo, lo + 50)
+            )
+
+    def test_incremental_appends_after_query(self):
+        tl = ResourceTimeline()
+        tl.record("n", "cpu", 1.0, 0.2)
+        assert tl.window_mean("n", "cpu", 0.0, 2.0) == pytest.approx(0.2)
+        tl.record("n", "cpu", 0.5, 0.4)  # out-of-order after a seal
+        assert tl.window_mean("n", "cpu", 0.0, 2.0) == pytest.approx(0.3)
+        assert len(tl) == 2
+
+    def test_concurrent_writer_and_reader(self):
+        """A sampler thread appending while the step loop queries (the live
+        driver shape) must lose no samples and never crash mid-query."""
+        import threading
+
+        tl = ResourceTimeline()
+        n_samples = 4000
+        errors = []
+
+        def writer():
+            try:
+                for t in range(n_samples):
+                    tl.record("h", "cpu", float(t), 0.5)
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        th = threading.Thread(target=writer)
+        th.start()
+        try:
+            while th.is_alive():
+                m = tl.window_mean("h", "cpu", 0.0, float(n_samples))
+                assert m is None or m == pytest.approx(0.5)
+        finally:
+            th.join()
+        assert not errors
+        assert len(tl) == n_samples
+        assert tl.window_mean("h", "cpu", 0.0, float(n_samples)) == pytest.approx(0.5)
+
+
+class TestServeDecodeStep:
+    def test_greedy_decode_takes_no_key(self):
+        """temperature == 0 → the jitted decode step must not thread a PRNG
+        key (dead key splitting costs host work per token)."""
+        import inspect
+
+        from repro.serve.engine import make_decode_step
+
+        class _M:
+            def decode(self, params, tokens, cache):  # pragma: no cover
+                raise NotImplementedError
+
+        greedy = make_decode_step(_M(), temperature=0.0)
+        sampling = make_decode_step(_M(), temperature=0.7)
+        assert "key" not in inspect.signature(greedy).parameters
+        assert "key" in inspect.signature(sampling).parameters

@@ -3,7 +3,13 @@ to the literal equation transcription, plus invariants of the rules."""
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container; "
+    "randomized equivalence coverage lives in test_frame_equivalence.py"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     BigRootsAnalyzer,
