@@ -1,5 +1,14 @@
-"""Beyond-paper benchmarks: analyzer throughput at 1000+ node scale and
-kernel microbenchmarks (interpret-mode wall times — CPU, labeled as such)."""
+"""Beyond-paper benchmarks: analyzer throughput at 1000+ node scale,
+streaming-vs-reseal sliding-window analysis, and kernel microbenchmarks
+(interpret-mode wall times — CPU, labeled as such).
+
+``streaming_scale`` is the CI-gated evidence for the sliding-window
+substrate: per-step incremental analyze over a 16k-row live window
+(``scale/stream_step_analyze_*``) must stay an order of magnitude under
+resealing + batch-analyzing the same window every step
+(``scale/reseal_step_*``).  The gate lives in ``BENCH_baseline.json`` and
+is enforced by ``python -m benchmarks.run --check``.
+"""
 from __future__ import annotations
 
 import sys
@@ -12,10 +21,12 @@ import numpy as np  # noqa: E402
 from repro.core import (  # noqa: E402
     BigRootsAnalyzer,
     JAX_FEATURES,
+    SlidingStageWindow,
     StageFrame,
     StageRecord,
     TaskRecord,
     TraceStore,
+    found_set,
 )
 
 from .common import Timer  # noqa: E402
@@ -126,6 +137,96 @@ def analyzer_scale():
         an.analyze_stage(StageRecord("s0", tasks))
     csv.append((f"scale/ingest_analyze_{n_hosts}_dataclass", t.us,
                 "TaskRecord ingest + analyze"))
+    return rows, csv
+
+
+def _step_columns(n_hosts: int, step: int, seed: int = 0) -> dict:
+    """One step's fleet report (n_hosts rows) with a persistent slow tail."""
+    cols = _synthetic_columns(n_hosts, seed=seed + step)
+    t0 = float(step)
+    cols["starts"] = np.full(n_hosts, t0)
+    cols["ends"] = t0 + cols["ends"] / 10.0  # durations ~1s around step t0
+    cols["task_ids"] = [f"h{i}/s{step}" for i in range(n_hosts)]
+    return cols
+
+
+def streaming_scale(hosts_per_step: int = 2048, window_steps: int = 8,
+                    measure_steps: int = 12):
+    """Streaming sliding-window analyze vs resealing the full window.
+
+    The window holds ``window_steps × hosts_per_step`` live rows (16384 by
+    default — the fleet scale of ``scale/analyzer_16384_hosts``).  Each
+    step ingests one fleet report, retires the oldest step, and runs
+    diagnosis:
+
+    - ``stream_step_analyze``: incremental ``analyze_stage(window)`` —
+      running aggregates + P² λq sketch, gate work O(stragglers·F);
+    - ``stream_step_ingest``: columnar bulk ``add_rows`` + retirement
+      (the O(changed rows) maintenance the analyze path banks on);
+    - ``reseal_step``: the pre-window alternative — rebuild a StageFrame
+      from the same live rows and batch-analyze it from scratch.
+
+    The derived column records confirmed-cause agreement between the
+    sketch-gated streaming pass and the exact batch pass on the final
+    window (they must agree up to λq-borderline findings).
+    """
+    n_live = hosts_per_step * window_steps
+    an = BigRootsAnalyzer(JAX_FEATURES)
+    w = SlidingStageWindow(
+        "s0", JAX_FEATURES, max_rows=n_live,
+        quantile=an.thresholds.quantile,
+    )
+    step = 0
+    for _ in range(window_steps):
+        cols = _step_columns(hosts_per_step, step)
+        w.add_rows(cols["task_ids"], cols["nodes"], cols["starts"],
+                   cols["ends"], feature_columns=cols["features"])
+        step += 1
+    an.analyze_stage(w)  # warm
+
+    # Per-step minima: every measured step does identical-size work, so the
+    # min is the honest per-step cost on a box with noisy neighbors (means
+    # fold other tenants' CPU bursts into whichever side they land on).
+    ingest_s: list[float] = []
+    analyze_s: list[float] = []
+    reseal_s: list[float] = []
+    sa = rsa = None
+    for _ in range(measure_steps):
+        cols = _step_columns(hosts_per_step, step)
+        step += 1
+        with Timer() as t:
+            w.add_rows(cols["task_ids"], cols["nodes"], cols["starts"],
+                       cols["ends"], feature_columns=cols["features"])
+        ingest_s.append(t.seconds)
+        with Timer() as t:
+            sa = an.analyze_stage(w)
+        analyze_s.append(t.seconds)
+        # Reseal path: full frame rebuild + batch analyze of the same rows
+        # (seal() is the public "snapshot the live window" operation).
+        with Timer() as t:
+            rsa = an.analyze_stage(w.seal())
+        reseal_s.append(t.seconds)
+
+    # analyze/reseal do identical work every step → min.  Ingest is *not*
+    # homogeneous (sketch re-anchors and compactions amortize across steps)
+    # → mean, so maintenance stays in the reported number.
+    stream_us = min(analyze_s) * 1e6
+    ingest_us = sum(ingest_s) / len(ingest_s) * 1e6
+    reseal_us = min(reseal_s) * 1e6
+    got = found_set(sa.root_causes)
+    want = found_set(rsa.root_causes)
+    diff = len(got ^ want)
+    speedup = reseal_us / max(stream_us, 1e-9)
+    rows = [(n_live, stream_us, reseal_us, speedup, diff)]
+    csv = [
+        (f"scale/stream_step_analyze_{n_live}", stream_us,
+         f"speedup_vs_reseal={speedup:.1f}x;stragglers={len(sa.straggler_ids)};"
+         f"cause_diff_vs_batch={diff}"),
+        (f"scale/stream_step_ingest_{hosts_per_step}", ingest_us,
+         f"rows_per_step={hosts_per_step};retire+sketch_included"),
+        (f"scale/reseal_step_{n_live}", reseal_us,
+         "frame rebuild + batch analyze of the full window"),
+    ]
     return rows, csv
 
 

@@ -5,6 +5,8 @@ Public API:
     from repro.core import (
         TaskRecord, StageRecord, Trace,
         StageFrame, TraceStore,
+        SlidingStageWindow, StreamingTraceStore, RootCauseStream,
+        P2Quantile, P2ColumnSketch,
         FeatureKind, FeatureSpec, FeatureSchema, SPARK_FEATURES, JAX_FEATURES,
         BigRootsAnalyzer, BigRootsThresholds, RootCause, StageAnalysis,
         PCCAnalyzer, PCCThresholds,
@@ -35,7 +37,9 @@ from .pcc import PCCAnalyzer, PCCThresholds
 from .records import StageRecord, TaskRecord, Trace
 from .report import TraceSummary, per_stage_table, render_markdown, summarize
 from .roc import ConfusionCounts, RocPoint, auc, evaluate, roc_sweep
+from .sketch import MIN_SKETCH_SAMPLES, P2ColumnSketch, P2Quantile
 from .straggler import DEFAULT_STRAGGLER_THRESHOLD, straggler_mask, straggler_scale
+from .window import RootCauseStream, SlidingStageWindow, StreamingTraceStore
 
 __all__ = [
     "BigRootsAnalyzer",
@@ -46,14 +50,20 @@ __all__ = [
     "FeatureSchema",
     "FeatureSpec",
     "JAX_FEATURES",
+    "MIN_SKETCH_SAMPLES",
+    "P2ColumnSketch",
+    "P2Quantile",
     "PCCAnalyzer",
     "PCCThresholds",
     "RocPoint",
     "RootCause",
+    "RootCauseStream",
     "SPARK_FEATURES",
+    "SlidingStageWindow",
     "StageAnalysis",
     "StageFrame",
     "StageRecord",
+    "StreamingTraceStore",
     "TaskRecord",
     "TimelineStore",
     "Trace",

@@ -240,12 +240,19 @@ def as_frame(stage: "StageRecord | StageFrame", schema: FeatureSchema) -> StageF
 
     A frame already carrying the same feature columns *and kinds* passes
     through untouched (kinds drive normalization and gating, so a
-    same-names schema that reclassifies a feature must not pass); anything
-    else (StageRecord, or a frame built under a different schema) is
-    re-ingested via the TaskRecord view.
+    same-names schema that reclassifies a feature must not pass); a
+    sliding window (anything exposing ``seal()``) is snapshotted to its
+    live-row frame; anything else (StageRecord, or a frame built under a
+    different schema) is re-ingested via the TaskRecord view.
     """
     if isinstance(stage, StageFrame) and stage.schema.signature == schema.signature:
         return stage
+    seal = getattr(stage, "seal", None)
+    if callable(seal):
+        sealed = seal()
+        if sealed.schema.signature == schema.signature:
+            return sealed
+        stage = sealed
     return StageFrame.from_tasks(stage.stage_id, stage.tasks, schema)
 
 

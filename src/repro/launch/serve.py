@@ -43,7 +43,8 @@ def main() -> None:
     params = model.init(jax.random.key(args.seed))
 
     timeline = ResourceTimeline()
-    telem = StepTelemetry("host0", timeline=timeline, window=64)
+    telem = StepTelemetry("host0", timeline=timeline, window=64,
+                          streaming=True)
     rng = np.random.default_rng(args.seed)
     requests = [
         Request(
@@ -60,6 +61,7 @@ def main() -> None:
         batch_size=args.batch_size,
         temperature=args.temperature,
         telemetry=telem,
+        live_analyzer=BigRootsAnalyzer(JAX_FEATURES, timelines=timeline),
     )
     with SystemSampler("host0", timeline, interval=0.25):
         t0 = time.time()
@@ -82,6 +84,10 @@ def main() -> None:
         "tokens_per_second": toks / wall if wall else 0.0,
         "prefill_seconds_last_batch": engine.last_prefill_seconds,
         "stragglers": summary.num_stragglers,
+        "live_root_causes": [
+            {"task": c.task_id, "feature": c.feature, "value": c.value}
+            for c in engine.live_root_causes
+        ],
     }, indent=2))
 
 

@@ -5,10 +5,14 @@ Runs a real JAX training loop (any --arch, reduced or full config) with:
   - per-step phase timing + /proc resource sampling → TaskRecords
     (stage = window of steps; on a single host the peer set is the step
     window, BigRoots' intra-node observation),
+  - *in-loop* BigRoots diagnosis every step: telemetry mirrors rows into a
+    sliding stage window and the incremental analyzer emits newly
+    confirmed RootCauses live (``--no-live-diagnose`` to disable),
   - optional live anomaly generators injected mid-run (the paper's §IV-B
     verification, on the real host),
   - checkpointing (atomic/async/retention) + supervised restart,
-  - offline BigRoots analysis + mitigation plan at the end.
+  - offline BigRoots analysis + mitigation plan at the end (the reference
+    post-hoc pass the live stream is property-tested against).
 
 CPU-sized example (the e2e deliverable):
   PYTHONPATH=src python -m repro.launch.train --arch granite_8b --smoke \\
@@ -32,6 +36,7 @@ from ..core import (
     BigRootsAnalyzer,
     JAX_FEATURES,
     PCCAnalyzer,
+    RootCauseStream,
     evaluate,
     found_set,
     render_markdown,
@@ -60,6 +65,12 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--window", type=int, default=16,
                     help="BigRoots stage window (steps)")
+    ap.add_argument("--no-live-diagnose", dest="live_diagnose",
+                    action="store_false", default=True,
+                    help="disable in-loop (per-step) BigRoots diagnosis")
+    ap.add_argument("--live-window", type=int, default=0,
+                    help="sliding live-diagnosis window in steps "
+                         "(default: --window)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--async-ckpt", action="store_true")
@@ -106,8 +117,19 @@ def run(args) -> dict:
     timeline = ResourceTimeline()
     sampler = SystemSampler(args.host, timeline, interval=0.25)
     gc_timer = GcTimer().install()
-    telem = StepTelemetry(args.host, timeline=timeline, window=args.window,
-                          gc_timer=gc_timer)
+    live_diagnose = getattr(args, "live_diagnose", True)
+    telem = StepTelemetry(
+        args.host, timeline=timeline, window=args.window, gc_timer=gc_timer,
+        streaming=live_diagnose,
+        stream_max_rows=(getattr(args, "live_window", 0) or args.window),
+    )
+    live_stream = None
+    if live_diagnose:
+        live_stream = RootCauseStream(
+            BigRootsAnalyzer(JAX_FEATURES, timelines=timeline),
+            telem.live_window,
+        )
+    live_causes: list[dict] = []
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
 
@@ -146,6 +168,14 @@ def run(args) -> dict:
                         ckpt.save(step, state["params"],
                                   blocking=not args.async_ckpt)
             losses.append(loss)
+            if live_stream is not None:
+                for cause in live_stream.step():
+                    live_causes.append({
+                        "step": step, "task": cause.task_id,
+                        "feature": cause.feature, "value": cause.value,
+                    })
+                    print(f"[live-diagnosis] step {step}: {cause.task_id} "
+                          f"<- {cause.feature} (F={cause.value:.3g})")
         if generator is not None:
             generator.stop()
             schedule_entries.append(
@@ -186,6 +216,8 @@ def run(args) -> dict:
         "loss_decreased": bool(losses and losses[-1] < losses[0]),
         "num_stragglers": summary.num_stragglers,
         "root_causes": dict(summary.causes_by_feature),
+        "live_causes": live_causes,
+        "live_causes_count": len(live_causes),
         "mitigations": [
             {"action": m.action.value, "target": m.target, "evidence": m.evidence}
             for m in plan

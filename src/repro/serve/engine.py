@@ -4,6 +4,12 @@ The engine batches concurrent requests into a fixed decode batch, runs a
 shared jitted decode step (greedy or temperature sampling), and emits
 BigRoots telemetry per step (the serve analog of per-step train tasks:
 stragglers here are slow hosts in a multi-host serving fleet).
+
+With a streaming telemetry (``StepTelemetry(streaming=True)``) and a
+``live_analyzer``, the engine also runs in-loop diagnosis after every
+decode step: newly confirmed root causes land in
+``engine.live_root_causes`` while the batch is still decoding, instead of
+in a post-hoc report.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.window import RootCauseStream
 from ..models.api import Model
 from ..telemetry.events import StepTelemetry
 
@@ -65,6 +72,7 @@ class ServeEngine:
         temperature: float = 0.0,
         telemetry: StepTelemetry | None = None,
         eos_id: int | None = None,
+        live_analyzer=None,
     ) -> None:
         self.model = model
         self.params = params
@@ -76,6 +84,15 @@ class ServeEngine:
         self._prefill = jax.jit(make_prefill_step(model))
         self._decode = jax.jit(make_decode_step(model, temperature))
         self._key = jax.random.key(0)
+        # In-loop diagnosis: requires a streaming telemetry (live_window).
+        self.diagnosis: RootCauseStream | None = None
+        self.live_root_causes: list = []
+        if (
+            live_analyzer is not None
+            and telemetry is not None
+            and telemetry.live_window is not None
+        ):
+            self.diagnosis = RootCauseStream(live_analyzer, telemetry.live_window)
 
     def _decode_once(self, nxt, cache):
         """One decode step; splits a PRNG key only when sampling."""
@@ -116,6 +133,8 @@ class ServeEngine:
                         nxt, cache = self._decode_once(nxt, cache)
                         jax.block_until_ready(nxt)
                     scope.add("read_bytes", float(nxt.size * 4))
+                if self.diagnosis is not None:
+                    self.live_root_causes.extend(self.diagnosis.step())
             else:
                 nxt, cache = self._decode_once(nxt, cache)
             out = np.asarray(nxt[:, 0])

@@ -6,12 +6,13 @@ mpstat/iostat/sar layer of the paper, re-homed onto an SPMD training host
 """
 from .events import GcTimer, StepTelemetry
 from .sampler import SystemSampler, read_cpu_sample, read_disk_sample, read_net_sample
-from .timeline import ResourceTimeline
+from .timeline import ResourceTimeline, TimelineCursor
 
 __all__ = [
     "GcTimer",
     "ResourceTimeline",
     "StepTelemetry",
+    "TimelineCursor",
     "SystemSampler",
     "read_cpu_sample",
     "read_disk_sample",

@@ -17,6 +17,7 @@ from dataclasses import dataclass, field
 
 from ..core.features import JAX_FEATURES, FeatureSchema
 from ..core.frame import TraceStore
+from ..core.window import SlidingStageWindow
 from .timeline import ResourceTimeline
 
 
@@ -106,6 +107,20 @@ class StepTelemetry:
             with s.phase("h2d"): batch = jax.device_put(batch)
             with s.phase("compute"): state, loss = train_step(state, batch)
         trace = telem.trace
+
+    Streaming mode (``streaming=True``) additionally mirrors every emitted
+    row into ``self.live_window`` — a
+    :class:`~repro.core.window.SlidingStageWindow` holding the last
+    ``window`` steps (override with ``stream_max_rows``/``stream_span``)
+    with running aggregates, so an analyzer can run *inside* the loop at
+    every step for O(changed rows) instead of resealing the stage::
+
+        telem = StepTelemetry("host3", timeline=tl, streaming=True)
+        stream = RootCauseStream(BigRootsAnalyzer(JAX_FEATURES, timelines=tl),
+                                 telem.live_window)
+        with telem.step(i) as s: ...
+        for cause in stream.step():  # newly confirmed causes, live
+            ...
     """
 
     # phase name → TIME feature name in the JAX schema
@@ -125,6 +140,10 @@ class StepTelemetry:
         clock=time.time,
         gc_timer: GcTimer | None = None,
         schema: FeatureSchema | None = None,
+        streaming: bool = False,
+        stream_max_rows: int | None = None,
+        stream_span: float | None = None,
+        stream_quantile: float = 0.9,
     ) -> None:
         self.node = node
         self.timeline = timeline
@@ -133,6 +152,15 @@ class StepTelemetry:
         self.gc_timer = gc_timer
         self.schema = schema or JAX_FEATURES
         self.trace = TraceStore(self.schema)
+        self.live_window: SlidingStageWindow | None = None
+        if streaming:
+            self.live_window = SlidingStageWindow(
+                f"{node}/live", self.schema,
+                span=stream_span,
+                max_rows=(stream_max_rows if stream_max_rows is not None
+                          else self.window),
+                quantile=stream_quantile,
+            )
 
     def stage_id_for(self, step: int) -> str:
         """Stage = window of `window` consecutive steps (peer pooling)."""
@@ -166,8 +194,9 @@ class StepTelemetry:
                 if val is not None:
                     features[metric] = val
 
+        task_id = f"{self.node}/step{scope.step:06d}"
         self.trace.add_row(
-            task_id=f"{self.node}/step{scope.step:06d}",
+            task_id=task_id,
             stage_id=self.stage_id_for(scope.step),
             node=self.node,
             start=scope.start,
@@ -175,6 +204,12 @@ class StepTelemetry:
             locality=scope.locality,
             features=features,
         )
+        if self.live_window is not None:
+            self.live_window.add_row(
+                task_id, self.node, scope.start, scope.end,
+                scope.locality, features,
+            )
+            self.live_window.advance(scope.end)
 
     # -- merging (multi-host traces are concatenated by the launcher) -----------
     def merge_into(self, trace) -> None:

@@ -29,7 +29,8 @@ class _Series:
     owning timeline's lock for every method and for reads of the views.
     """
 
-    __slots__ = ("_ts", "_vals", "_csum", "n", "_csum_n", "_sorted")
+    __slots__ = ("_ts", "_vals", "_csum", "n", "_csum_n", "_sorted",
+                 "sort_gen")
 
     _INITIAL = 64
 
@@ -41,6 +42,9 @@ class _Series:
         self.n = 0
         self._csum_n = 0
         self._sorted = True
+        # Bumped whenever seal() re-sorts: cursors key their position hints
+        # on it (a re-sort invalidates any remembered index).
+        self.sort_gen = 0
 
     def _reserve(self, extra: int) -> None:
         need = self.n + extra
@@ -90,6 +94,7 @@ class _Series:
             self._vals[:n] = self._vals[:n][order]
             self._sorted = True
             self._csum_n = 0
+            self.sort_gen += 1
         if self._csum_n < n:
             m = self._csum_n
             self._csum[m + 1 : n + 1] = self._csum[m] + np.cumsum(
@@ -195,6 +200,11 @@ class ResourceTimeline:
                     ) / (hi[ok] - lo[ok])
         return out
 
+    def cursor(self) -> "TimelineCursor":
+        """Incremental query cursor for monotonically advancing windows
+        (the in-loop Eq. 6 edge queries of a streaming analyzer)."""
+        return TimelineCursor(self)
+
     def series(self, node: str, metric: str) -> tuple[list[float], list[float]]:
         with self._lock:
             s = self._series.get((node, metric))
@@ -239,3 +249,78 @@ class ResourceTimeline:
                 tl.record_many(obj["node"], obj["metric"],
                                zip(obj["ts"], obj["vals"]))
         return tl
+
+
+class TimelineCursor:
+    """Incremental :meth:`ResourceTimeline.window_means` for in-loop use.
+
+    A streaming analyzer issues edge-detection windows whose bounds advance
+    monotonically with wall time (each step queries slightly later windows
+    than the last).  The cursor remembers, per series, the smallest index
+    the previous call resolved to and restricts the next ``searchsorted``
+    to the suffix from there — the binary search runs over the recent tail
+    instead of the whole multi-hour series.  Correctness guards:
+
+    - the hint is only used when every queried ``t0`` lies strictly after
+      the sample just before the hint (otherwise: full search — answers are
+      *always* exact, the cursor is only a lower-bound accelerator);
+    - a series re-sort (out-of-order bulk merge) bumps ``sort_gen``, which
+      invalidates the hint;
+    - the effective hint is the minimum over the *last two* calls: the
+      analyzer alternates head windows (``start - edge_width``) and tail
+      windows (``end``) per step, and the head of step k+1 starts before
+      the tail of step k — a single-call hint would trip the exactness
+      guard on every other call and degenerate to full searches.
+
+    Same query contract as :meth:`ResourceTimeline.window_means` /
+    :meth:`ResourceTimeline.window_mean`, so it satisfies the analyzer's
+    ``TimelineStore`` protocol and slots in transparently.
+    """
+
+    def __init__(self, timeline: ResourceTimeline) -> None:
+        self.timeline = timeline
+        # key -> (sort_gen, prev-call min lo, last-call min lo)
+        self._hints: dict[tuple[str, str], tuple[int, int, int]] = {}
+
+    def window_means(
+        self,
+        nodes: Sequence[str],
+        metrics: Sequence[str],
+        t0s: np.ndarray,
+        t1s: np.ndarray,
+    ) -> np.ndarray:
+        tl = self.timeline
+        t0s = np.asarray(t0s, dtype=np.float64)
+        t1s = np.asarray(t1s, dtype=np.float64)
+        out = np.full(len(nodes), np.nan, dtype=np.float64)
+        groups: dict[tuple[str, str], list[int]] = {}
+        for i, key in enumerate(zip(nodes, metrics)):
+            groups.setdefault(key, []).append(i)
+        with tl._lock:
+            for key, idx_list in groups.items():
+                s = tl._series.get(key)
+                if s is None or s.n == 0:
+                    continue
+                s.seal()
+                idx = np.asarray(idx_list, dtype=np.int64)
+                gen, prev_lo, last_lo = self._hints.get(key, (-1, 0, 0))
+                base = min(prev_lo, last_lo) if gen == s.sort_gen else 0
+                if base > s.n or (
+                    base > 0 and s._ts[base - 1] >= float(t0s[idx].min())
+                ):
+                    base = 0
+                tail = s.ts[base:]
+                lo = base + np.searchsorted(tail, t0s[idx], side="left")
+                hi = base + np.searchsorted(tail, t1s[idx], side="right")
+                ok = hi > lo
+                if np.any(ok):
+                    out[idx[ok]] = (
+                        s.csum[hi[ok]] - s.csum[lo[ok]]
+                    ) / (hi[ok] - lo[ok])
+                carry = last_lo if gen == s.sort_gen else 0
+                self._hints[key] = (s.sort_gen, carry, int(lo.min()))
+        return out
+
+    def window_mean(self, node: str, metric: str, t0: float, t1: float) -> float | None:
+        got = self.window_means([node], [metric], np.array([t0]), np.array([t1]))
+        return None if np.isnan(got[0]) else float(got[0])

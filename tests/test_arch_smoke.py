@@ -11,6 +11,10 @@ import pytest
 from repro.configs import ARCH_IDS, get_config, shapes_for
 from repro.models import Model, smoke_variant
 
+# Per-arch forward+train+decode sweeps: the heaviest suite — out of the CI
+# fast lane, still in the full tier-1 run.
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

@@ -21,6 +21,7 @@ from repro.core import (
     BigRootsThresholds,
     PCCAnalyzer,
     SPARK_FEATURES,
+    SlidingStageWindow,
     StageFrame,
     StageRecord,
     TaskRecord,
@@ -213,6 +214,149 @@ class TestReferenceEquivalence:
             an = PCCAnalyzer(SPARK_FEATURES)
             frame = StageFrame.from_tasks("s", stage.tasks, SPARK_FEATURES)
             assert an.analyze_stage(stage) == an.analyze_stage(frame), f"seed={seed}"
+
+
+def replay_into_window(rng, stage, quantile, **window_kw):
+    """Stream a stage's tasks into a window in random arrival order."""
+    w = SlidingStageWindow("s", SPARK_FEATURES, quantile=quantile, **window_kw)
+    for i in rng.permutation(len(stage.tasks)):
+        t = stage.tasks[i]
+        w.add_row(t.task_id, t.node, t.start, t.end, t.locality, t.features)
+    return w
+
+
+class TestStreamingReplay:
+    """Streaming (SlidingStageWindow) analyze ≡ batch analyze.
+
+    Exact mode (``window_exact_quantiles=True``) must match the loop
+    reference *identically*; default sketch mode may differ only on
+    λq-borderline findings (value within sketch tolerance of the exact
+    quantile) — the paper's gates are thresholds, so only knife-edge pairs
+    can flip.
+    """
+
+    def test_exact_mode_matches_reference_with_timelines(self):
+        for seed in range(40):
+            rng = np.random.default_rng(seed)
+            stage = random_stage(rng)
+            tl = random_timeline(rng, stage)
+            th = random_thresholds(rng)
+            an = BigRootsAnalyzer(SPARK_FEATURES, th, timelines=tl,
+                                  window_exact_quantiles=True)
+            w = replay_into_window(rng, stage, th.quantile)
+            got = found_set(an.analyze_stage(w).root_causes)
+            want = reference_root_causes(stage, SPARK_FEATURES, th,
+                                         timelines=tl)
+            assert got == want, f"seed={seed}"
+
+    def test_sketch_mode_differs_only_on_quantile_borderline(self):
+        for seed in range(30):
+            rng = np.random.default_rng(500 + seed)
+            stage = random_stage(rng, n=int(rng.integers(20, 60)))
+            th = random_thresholds(rng)
+            an = BigRootsAnalyzer(SPARK_FEATURES, th)
+            w = replay_into_window(rng, stage, th.quantile)
+            got = found_set(an.analyze_stage(w).root_causes)
+            want = found_set(an.analyze_stage(stage).root_causes)
+            if got == want:
+                continue
+            q_exact = w.quantiles(th.quantile, exact=True)
+            q_sketch = w.quantiles(th.quantile)
+            col = SPARK_FEATURES.col_index
+            ids = {w.task_id(int(i)): int(i) for i in w.live_index()}
+            for task_id, feature in got ^ want:
+                j = col[feature]
+                v = float(w.v[ids[task_id], j])
+                lo, hi = sorted((float(q_exact[j]), float(q_sketch[j])))
+                # a flipped finding must sit between the two gate values
+                assert lo <= v <= hi or np.isclose(v, lo) or np.isclose(v, hi), (
+                    f"seed={seed}: non-borderline flip {(task_id, feature)}: "
+                    f"v={v} exact_q={q_exact[j]} sketch_q={q_sketch[j]}"
+                )
+
+    def test_windowed_replay_matches_batch_on_survivors(self):
+        """After time-based retirement (including boundary-straddling rows
+        and out-of-order arrival), exact-mode analysis of the window equals
+        batch analysis of exactly the surviving tasks."""
+        for seed in range(30):
+            rng = np.random.default_rng(1500 + seed)
+            stage = random_stage(rng, n=int(rng.integers(5, 50)))
+            th = random_thresholds(rng)
+            w = SlidingStageWindow("s", SPARK_FEATURES,
+                                   span=float(rng.uniform(10, 60)),
+                                   quantile=th.quantile)
+            accepted = []
+            for i in rng.permutation(len(stage.tasks)):
+                t = stage.tasks[i]
+                if w.add_row(t.task_id, t.node, t.start, t.end, t.locality,
+                             t.features):
+                    accepted.append(t)
+                w.advance()
+            survivors = [t for t in accepted if t.end > w.watermark]
+            assert sorted(t.task_id for t in survivors) == sorted(
+                w.task_id(int(i)) for i in w.live_index())
+            an = BigRootsAnalyzer(SPARK_FEATURES, th,
+                                  window_exact_quantiles=True)
+            got = found_set(an.analyze_stage(w).root_causes)
+            want = reference_root_causes(StageRecord("s", survivors),
+                                         SPARK_FEATURES, th)
+            assert got == want, f"seed={seed}"
+
+    def test_streaming_uses_timeline_cursor_and_matches_batch(self):
+        """The window path routes Eq. 6 queries through a TimelineCursor;
+        results must equal the batch path's plain window_means."""
+        cursor_used = 0
+        for seed in range(15):
+            rng = np.random.default_rng(2500 + seed)
+            stage = random_stage(rng)
+            tl = random_timeline(rng, stage)
+            th = random_thresholds(rng)
+            an = BigRootsAnalyzer(SPARK_FEATURES, th, timelines=tl,
+                                  window_exact_quantiles=True)
+            w = replay_into_window(rng, stage, th.quantile)
+            got = found_set(an.analyze_stage(w).root_causes)
+            cursor_used += an._tl_cursor is not None
+            want = found_set(an.analyze_stage(stage).root_causes)
+            assert got == want, f"seed={seed}"
+        # the cursor is created lazily, only when Eq. 6 candidates fire —
+        # across 15 random stages that must have happened
+        assert cursor_used > 0
+
+    @pytest.mark.slow
+    def test_16k_host_stage_acceptance(self):
+        """Acceptance: streaming replay of a 16k-host stage produces the
+        same confirmed RootCause set as batch analyze_stage up to
+        λq-borderline findings (sketch-tolerant)."""
+        rng = np.random.default_rng(42)
+        n = 16384
+        dur = rng.lognormal(0.0, 0.08, n) * 10.0
+        slow = rng.choice(n, size=n // 100, replace=False)
+        dur[slow] *= 2.0
+        cpu = rng.uniform(0.1, 0.3, n)
+        cpu[slow] = 0.95
+        feats = {"cpu": cpu, "read_bytes": rng.uniform(0.9, 1.1, n) * 64e6}
+        an = BigRootsAnalyzer(SPARK_FEATURES)
+        w = SlidingStageWindow("s", SPARK_FEATURES, max_rows=n,
+                               quantile=an.thresholds.quantile)
+        w.add_rows([f"h{i}/s0" for i in range(n)],
+                   [f"h{i}" for i in range(n)],
+                   np.zeros(n), dur,
+                   feature_columns=feats)
+        frame = StageFrame.from_columns(
+            "s", SPARK_FEATURES, [f"h{i}/s0" for i in range(n)],
+            [f"h{i}" for i in range(n)], np.zeros(n), dur,
+            feature_columns=feats)
+        got = found_set(an.analyze_stage(w).root_causes)
+        want = found_set(an.analyze_stage(frame).root_causes)
+        q_exact = w.quantiles(exact=True)
+        q_sketch = w.quantiles()
+        col = SPARK_FEATURES.col_index
+        ids = {w.task_id(int(i)): int(i) for i in w.live_index()}
+        for task_id, feature in got ^ want:
+            j = col[feature]
+            v = float(w.v[ids[task_id], j])
+            lo, hi = sorted((float(q_exact[j]), float(q_sketch[j])))
+            assert lo <= v <= hi, f"non-borderline flip {(task_id, feature)}"
 
 
 class TestTraceStore:

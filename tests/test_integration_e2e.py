@@ -23,6 +23,7 @@ def make_args(**overrides):
     return args
 
 
+@pytest.mark.slow
 class TestTrainDriver:
     def test_loss_decreases_and_trace_emitted(self, tmp_path):
         args = make_args(arch="mamba2_130m",

@@ -67,6 +67,7 @@ class TestParamSpecRules:
             jax.sharding.PartitionSpec(None)
 
 
+@pytest.mark.slow
 class TestVirtualMesh:
     def test_sharded_train_step_matches_single_device(self):
         """2×4 mesh train step ≡ single-device train step (same loss)."""

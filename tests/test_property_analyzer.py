@@ -11,6 +11,10 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+# Hypothesis property sweeps: slow lane (the deterministic randomized
+# equivalents run in test_frame_equivalence.py / test_window.py).
+pytestmark = pytest.mark.slow
+
 from repro.core import (
     BigRootsAnalyzer,
     BigRootsThresholds,

@@ -240,6 +240,7 @@ class TestCompression:
         scale = float(quantize(g_true).scale.max())
         assert err <= 2 * scale  # bias does not accumulate across steps
 
+    @pytest.mark.slow
     def test_compressed_train_step_converges(self):
         cfg = smoke_variant(get_config("mamba2_130m"))
         model = Model(cfg)
@@ -284,6 +285,7 @@ class TestOptimizer:
         assert float(new_params["w"][0, 0]) < 1.0       # decayed
         assert float(new_params["norm_scale"][0]) == 1.0  # exempt
 
+    @pytest.mark.slow
     def test_accum_matches_full_batch(self):
         cfg = smoke_variant(get_config("mamba2_130m"))
         model = Model(cfg)
