@@ -40,6 +40,7 @@ BENCHES = {
     "table7": paper_tables.table7,
     "analyzer_scale": scale_bench.analyzer_scale,
     "streaming_scale": scale_bench.streaming_scale,
+    "fleet_gates": scale_bench.fleet_gates,
     "kernels": scale_bench.kernel_bench,
     "e2e_train": scale_bench.e2e_train_bench,
 }
@@ -107,7 +108,7 @@ def main() -> None:
     if argv:
         wanted = argv
     elif check:
-        wanted = ["analyzer_scale", "streaming_scale"]
+        wanted = ["analyzer_scale", "streaming_scale", "fleet_gates"]
     else:
         wanted = list(BENCHES)
 

@@ -32,6 +32,7 @@ from .features import (
     FeatureSpec,
     get_schema,
 )
+from .fleet import FleetGateBatch, eval_gates_np, pack_windows
 from .frame import StageFrame, TraceStore
 from .pcc import PCCAnalyzer, PCCThresholds
 from .records import StageRecord, TaskRecord, Trace
@@ -39,12 +40,19 @@ from .report import TraceSummary, per_stage_table, render_markdown, summarize
 from .roc import ConfusionCounts, RocPoint, auc, evaluate, roc_sweep
 from .sketch import MIN_SKETCH_SAMPLES, P2ColumnSketch, P2Quantile
 from .straggler import DEFAULT_STRAGGLER_THRESHOLD, straggler_mask, straggler_scale
-from .window import RootCauseStream, SlidingStageWindow, StreamingTraceStore
+from .window import (
+    CauseState,
+    RootCauseStream,
+    SlidingStageWindow,
+    StreamingTraceStore,
+)
 
 __all__ = [
     "BigRootsAnalyzer",
     "BigRootsThresholds",
+    "CauseState",
     "ConfusionCounts",
+    "FleetGateBatch",
     "DEFAULT_STRAGGLER_THRESHOLD",
     "FeatureKind",
     "FeatureSchema",
@@ -71,9 +79,11 @@ __all__ = [
     "TraceSummary",
     "auc",
     "evaluate",
+    "eval_gates_np",
     "found_set",
     "get_schema",
     "normalize_features",
+    "pack_windows",
     "per_stage_table",
     "render_markdown",
     "roc_sweep",

@@ -60,11 +60,15 @@ exact ``np.quantile`` — tiny stages answer seed-identically.
 streaming sibling): ``add_row`` routes to per-stage windows and
 ``stages()`` yields the windows themselves so ``analyzer.analyze(store)``
 takes the incremental path per stage.  :class:`RootCauseStream` is the
-in-loop driver face: analyze-after-each-step with emit-once deduping, the
-"live RootCauses instead of post-hoc" mode of the ROADMAP.
+in-loop driver face: analyze-after-each-step with emit-once deduping that
+*decays* — confirmations are suppressed while a cause stays hot, re-emitted
+with escalated severity when it re-confirms after ``decay_steps`` clean
+windows, and forgotten entirely after ``forget_steps``, so the dedup state
+stays bounded over an unbounded serve loop (see the class docstring).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, replace
 from typing import Iterator, Mapping, Sequence
 
 import numpy as np
@@ -731,23 +735,74 @@ class StreamingTraceStore:
                     f.write(frame.task(i).to_json() + "\n")
 
 
+@dataclass
+class CauseState:
+    """Dedup/decay bookkeeping for one (task, feature) cause key."""
+
+    first_step: int           # step of first confirmation
+    last_confirmed: int       # step of the latest confirmation
+    confirmations: int = 1    # total confirmations observed (all cycles)
+    emits: int = 1            # times this key was emitted to the caller
+    severity: int = 1         # escalation level: +1 per re-emergence after decay
+
+    def clean_windows(self, step: int) -> int:
+        return step - self.last_confirmed
+
+
 class RootCauseStream:
-    """Emit-once live diagnosis: run the incremental analyzer against a
-    window (or every window of a :class:`StreamingTraceStore`) after each
-    step and return only the root causes not seen before.
+    """Emit-once live diagnosis with bounded out-of-window memory.
+
+    Runs the incremental analyzer against a window (or every window of a
+    :class:`StreamingTraceStore`) after each step and returns only the
+    root causes not currently deduped.
+
+    Dedup policy (the ROADMAP's out-of-window straggler memory): a key's
+    repeat confirmations within ``decay_steps`` steps of the last one are
+    suppressed (emit-once) but counted in its :class:`CauseState`.  Once a
+    key stays *clean* (unconfirmed) for more than ``decay_steps`` steps it
+    is dormant: the next confirmation **re-emits** it with ``severity``
+    escalated by one — a cause that keeps coming back is a worse cause,
+    not a duplicate.  A key clean for more than ``forget_steps`` steps
+    (default ``8 × decay_steps``) is dropped entirely, which bounds
+    ``seen`` by the distinct causes of the last ``forget_steps`` steps
+    instead of the whole history of a long-running serve loop.
+    ``decay_steps=None`` restores the legacy grow-forever/emit-once-ever
+    behavior.
 
     >>> stream = RootCauseStream(analyzer, telem.live_window)
     >>> ... inside the train loop, once per step ...
     >>> for cause in stream.step():
-    ...     log.warning("straggler %s: %s", cause.task_id, cause.feature)
+    ...     log.warning("straggler %s: %s (sev %d)", cause.task_id,
+    ...                 cause.feature, cause.severity)
     """
 
-    def __init__(self, analyzer, source) -> None:
+    def __init__(
+        self,
+        analyzer,
+        source,
+        *,
+        decay_steps: int | None = 256,
+        forget_steps: int | None = None,
+    ) -> None:
+        if decay_steps is not None and decay_steps < 1:
+            raise ValueError("decay_steps must be >= 1 (or None to disable)")
         self.analyzer = analyzer
         self.source = source
-        self.seen: set[tuple[str, str]] = set()
+        self.decay_steps = decay_steps
+        if forget_steps is None and decay_steps is not None:
+            forget_steps = 8 * decay_steps
+        if forget_steps is not None and decay_steps is not None:
+            forget_steps = max(forget_steps, decay_steps)
+        self.forget_steps = forget_steps
+        self.seen: dict[tuple[str, str], CauseState] = {}
         self.last_analysis = None
+        self.steps = 0
         self.emitted = 0
+        self.reemitted = 0
+        self.forgotten = 0
+
+    def state(self, key: tuple[str, str]) -> CauseState | None:
+        return self.seen.get(key)
 
     def step(self) -> list:
         if isinstance(self.source, StreamingTraceStore):
@@ -755,11 +810,34 @@ class RootCauseStream:
         else:
             analyses = [self.analyzer.analyze_stage(self.source)]
         self.last_analysis = analyses[-1] if analyses else None
+        self.steps += 1
+        step = self.steps
+        decay = self.decay_steps
         fresh = []
         for sa in analyses:
             for cause in sa.root_causes:
-                if cause.key not in self.seen:
-                    self.seen.add(cause.key)
+                st = self.seen.get(cause.key)
+                if st is None:
+                    self.seen[cause.key] = CauseState(
+                        first_step=step, last_confirmed=step
+                    )
                     fresh.append(cause)
+                    continue
+                dormant = decay is not None and st.clean_windows(step) > decay
+                st.confirmations += 1
+                st.last_confirmed = step
+                if dormant:
+                    # Re-emergence after a clean spell: escalate and re-emit.
+                    st.severity += 1
+                    st.emits += 1
+                    self.reemitted += 1
+                    fresh.append(replace(cause, severity=st.severity))
         self.emitted += len(fresh)
+        if self.forget_steps is not None:
+            horizon = self.forget_steps
+            expired = [k for k, st in self.seen.items()
+                       if st.clean_windows(step) > horizon]
+            for k in expired:
+                del self.seen[k]
+            self.forgotten += len(expired)
         return fresh

@@ -4,6 +4,7 @@ Each kernel ships three layers: ``<name>.py`` (pl.pallas_call + BlockSpec),
 ``ops.py`` (jit'd model-layout wrappers), ``ref.py`` (pure-jnp oracles).
 Validated in interpret mode on CPU; compiled by Mosaic on TPU.
 """
+from .bigroots_gates import eval_gates
 from .decode_attention import decode_attention
 from .flash_attention import flash_attention
 from .moe_gmm import grouped_matmul
@@ -11,6 +12,7 @@ from .ssd_scan import ssd_intra_chunk
 
 __all__ = [
     "decode_attention",
+    "eval_gates",
     "flash_attention",
     "grouped_matmul",
     "ssd_intra_chunk",

@@ -6,6 +6,17 @@ those samples (Eq. 1-3).  Here the same three quantities are read straight
 from ``/proc/stat``, ``/proc/diskstats`` and ``/proc/net/dev`` — no external
 tools — and pushed into a :class:`ResourceTimeline`.
 
+Robustness: in containers and on non-Linux hosts some of those files do not
+exist (``/proc/diskstats`` is the usual casualty).  The sampler degrades
+per metric instead of dying: a metric whose source file is missing or
+unreadable is skipped for that tick (its Eq. 6 timeline simply has a gap —
+the analyzer's edge detection already treats missing windows as "keep"),
+the other metrics keep flowing, and :attr:`SystemSampler.metric_health` /
+:meth:`SystemSampler.healthy` expose which sources are currently dark so a
+supervisor can alarm on a starved timeline instead of silently losing the
+``sampler-<host>`` thread.  All ``/proc`` paths are injectable for tests
+(fake-/proc fixtures) and exotic mount points.
+
 Overhead (paper Table VII analog, measured by ``benchmarks/table7_overhead``):
 one read+parse of the three files per second, <1% of one core.
 """
@@ -23,6 +34,8 @@ _PROC_NETDEV = "/proc/net/dev"
 
 # Device prefixes that are not physical disks.
 _SKIP_DISK_PREFIXES = ("loop", "ram", "zram", "dm-", "sr", "fd", "md")
+
+METRICS = ("cpu", "disk", "network")
 
 
 @dataclass(frozen=True)
@@ -92,6 +105,14 @@ class SystemSampler:
       cpu     — user-time fraction over the last interval (Eq. 1 integrand)
       disk    — I/O-time fraction over the last interval (Eq. 2 integrand)
       network — bytes/sec over the last interval (Eq. 3 integrand)
+
+    Each metric is sampled independently; a missing/unreadable source file
+    (``OSError``, including ``FileNotFoundError`` inside containers, and
+    ``ValueError`` from a malformed line) marks that metric unhealthy for
+    the tick and the sampler moves on — the thread never dies on a bad
+    ``/proc``.  Health is visible via :attr:`metric_health` (metric →
+    bool, last tick), :meth:`healthy` (all sources readable) and
+    :attr:`read_errors` (cumulative per-metric failure counts).
     """
 
     def __init__(
@@ -100,6 +121,10 @@ class SystemSampler:
         timeline: ResourceTimeline,
         interval: float = 1.0,
         clock=time.time,
+        *,
+        proc_stat: str = _PROC_STAT,
+        proc_diskstats: str = _PROC_DISKSTATS,
+        proc_netdev: str = _PROC_NETDEV,
     ) -> None:
         self.node = node
         self.timeline = timeline
@@ -107,24 +132,68 @@ class SystemSampler:
         self.clock = clock
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
-        self._prev: tuple[CpuSample, DiskSample, NetSample, float] | None = None
+        # metric → (reader, source path); per-metric previous samples so one
+        # dark source cannot stall the delta pipeline of the others.
+        self._sources = {
+            "cpu": (read_cpu_sample, proc_stat),
+            "disk": (read_disk_sample, proc_diskstats),
+            "network": (read_net_sample, proc_netdev),
+        }
+        self._prev: dict[str, tuple[object, float]] = {}
+        self.metric_health: dict[str, bool] = {m: True for m in METRICS}
+        self.read_errors: dict[str, int] = {m: 0 for m in METRICS}
+        self.ticks = 0
+        # Failures past the readers (e.g. a timeline sink raising):
+        # tick_errors counts them cumulatively; last_tick_ok tracks only
+        # the most recent tick so health recovers once the sink does
+        # (mirroring the per-tick semantics of metric_health).
+        self.tick_errors = 0
+        self.last_tick_ok = True
+
+    # -- health --------------------------------------------------------------
+    def healthy(self) -> bool:
+        """True iff every metric source was readable on the last tick and
+        the last tick did not fail past the readers (sink/clock errors)."""
+        return all(self.metric_health.values()) and self.last_tick_ok
+
+    def missing_metrics(self) -> list[str]:
+        return [m for m in METRICS if not self.metric_health[m]]
 
     # -- manual stepping (used by tests and by the serve loop) ---------------
     def sample_once(self) -> None:
         now = self.clock()
-        cur = (read_cpu_sample(), read_disk_sample(), read_net_sample(), now)
-        if self._prev is not None:
-            pc, pd, pn, pt = self._prev
-            cc, cd, cn, _ = cur
+        cur: dict[str, object] = {}
+        for metric, (reader, path) in self._sources.items():
+            try:
+                cur[metric] = reader(path)
+                self.metric_health[metric] = True
+            except (OSError, ValueError, IndexError):
+                # Missing /proc file (containers), transient read hiccup, or
+                # a malformed line: skip this metric, keep the rest alive.
+                self.metric_health[metric] = False
+                self.read_errors[metric] += 1
+        self.ticks += 1
+        for metric, sample in cur.items():
+            prev = self._prev.get(metric)
+            self._prev[metric] = (sample, now)
+            if prev is None:
+                continue
+            psample, pt = prev
             dt = max(now - pt, 1e-9)
-            d_total = max(cc.total - pc.total, 1)
-            cpu = (cc.user - pc.user) / d_total
-            disk = min((cd.io_ticks_ms - pd.io_ticks_ms) / (dt * 1000.0), 1.0)
-            net = (cn.bytes_total - pn.bytes_total) / dt
-            self.timeline.record(self.node, "cpu", now, max(cpu, 0.0))
-            self.timeline.record(self.node, "disk", now, max(disk, 0.0))
-            self.timeline.record(self.node, "network", now, max(net, 0.0))
-        self._prev = cur
+            if metric == "cpu":
+                d_total = max(sample.total - psample.total, 1)
+                value = max((sample.user - psample.user) / d_total, 0.0)
+            elif metric == "disk":
+                value = max(
+                    min((sample.io_ticks_ms - psample.io_ticks_ms)
+                        / (dt * 1000.0), 1.0),
+                    0.0,
+                )
+            else:  # network
+                value = max(
+                    (sample.bytes_total - psample.bytes_total) / dt, 0.0
+                )
+            self.timeline.record(self.node, metric, now, value)
 
     # -- background thread -----------------------------------------------------
     def start(self) -> "SystemSampler":
@@ -137,13 +206,19 @@ class SystemSampler:
         return self
 
     def _run(self) -> None:
-        self.sample_once()
-        while not self._stop.wait(self.interval):
+        while True:
             try:
                 self.sample_once()
-            except OSError:
-                # /proc hiccup: skip the sample rather than die.
-                continue
+                self.last_tick_ok = True
+            except Exception:
+                # Belt and braces: per-metric errors are handled inside
+                # sample_once; anything else (e.g. a timeline sink bug)
+                # must not kill the thread — but it must not be invisible
+                # either, so it trips healthy() until a tick succeeds.
+                self.tick_errors += 1
+                self.last_tick_ok = False
+            if self._stop.wait(self.interval):
+                return
 
     def stop(self) -> None:
         self._stop.set()

@@ -207,6 +207,47 @@ class TestReferenceEquivalence:
         want = reference_root_causes(stage, reclassified)
         assert got == want
 
+    def test_peer_means_flat_bincount_identical_to_column_loop(self):
+        """The flattened single-bincount _peer_means must be *bit-identical*
+        to the per-column-loop form it replaced (same per-bin accumulation
+        order), including NaN placement for empty peer groups."""
+        from repro.core.analyzer import _peer_means
+
+        def reference(F, node_idx):  # the pre-PR3 per-column loop, verbatim
+            n, k = F.shape
+            num_nodes = int(node_idx.max()) + 1 if n else 0
+            node_sum = np.empty((num_nodes, k), dtype=np.float64)
+            for col in range(k):
+                node_sum[:, col] = np.bincount(node_idx, weights=F[:, col],
+                                               minlength=num_nodes)
+            node_cnt = np.bincount(node_idx, minlength=num_nodes).astype(np.float64)
+            total_sum = F.sum(axis=0)
+            cnt_i = node_cnt[node_idx]
+            inter_cnt = n - cnt_i
+            intra_cnt = cnt_i - 1.0
+            with np.errstate(invalid="ignore", divide="ignore"):
+                inter = (total_sum[None, :] - node_sum[node_idx]) / inter_cnt[:, None]
+                intra = (node_sum[node_idx] - F) / intra_cnt[:, None]
+            inter[inter_cnt <= 0] = np.nan
+            intra[intra_cnt <= 0] = np.nan
+            return inter, intra
+
+        for seed in range(25):
+            rng = np.random.default_rng(9000 + seed)
+            n = int(rng.integers(1, 200))
+            k = int(rng.integers(1, 16))
+            F = rng.normal(size=(n, k)) * rng.lognormal(0.0, 3.0, size=k)
+            node_idx = rng.integers(0, int(rng.integers(1, 9)), size=n)
+            node_idx = node_idx.astype(np.int64)
+            got_inter, got_intra = _peer_means(F, node_idx)
+            want_inter, want_intra = reference(F, node_idx)
+            assert np.array_equal(got_inter, want_inter, equal_nan=True), seed
+            assert np.array_equal(got_intra, want_intra, equal_nan=True), seed
+        # single-node corner: inter empty everywhere
+        F = np.arange(12.0).reshape(4, 3)
+        inter, intra = _peer_means(F, np.zeros(4, dtype=np.int64))
+        assert np.isnan(inter).all() and not np.isnan(intra).any()
+
     def test_pcc_frame_matches_record_path(self):
         for seed in range(15):
             rng = np.random.default_rng(4000 + seed)

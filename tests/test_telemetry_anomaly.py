@@ -51,29 +51,173 @@ class TestTimeline:
         assert loaded.nodes() == ["n0", "n1"]
 
 
+class FakeProc:
+    """A fake /proc directory the samplers can be pointed at — tests never
+    depend on the host actually being Linux (containers often lack
+    /proc/diskstats; macOS lacks all three)."""
+
+    def __init__(self, root):
+        self.root = root
+        self.stat = str(root / "stat")
+        self.diskstats = str(root / "diskstats")
+        self.netdev = str(root / "net_dev")
+        self.write(user=100, nice=50, rest=(30, 1000, 20, 0, 5, 0, 0, 0),
+                   io_ticks=700, rx=5000, tx=3000)
+
+    def write(self, *, user, nice, rest, io_ticks, rx, tx):
+        (self.root / "stat").write_text(
+            f"cpu  {user} {nice} " + " ".join(str(x) for x in rest) + "\n"
+            "cpu0 1 1 1 1 1 1 1 1 1 1\n"
+        )
+        (self.root / "diskstats").write_text(
+            # partition (skipped), loop device (skipped), whole disk (counted)
+            f"   8       1 sda1 10 0 20 3 5 0 15 4 0 999999 8\n"
+            f"   7       0 loop0 1 0 1 0 0 0 0 0 0 999999 0\n"
+            f"   8       0 sda 1000 0 2000 300 500 0 1500 400 0 {io_ticks} 800\n"
+        )
+        (self.root / "net_dev").write_text(
+            "Inter-|   Receive                                             "
+            "   |  Transmit\n"
+            " face |bytes    packets errs drop fifo frame compressed multicast"
+            "|bytes    packets errs drop fifo colls carrier compressed\n"
+            "    lo: 999999 1 0 0 0 0 0 0 999999 1 0 0 0 0 0 0\n"
+            f"  eth0: {rx} 10 0 0 0 0 0 0 {tx} 8 0 0 0 0 0 0\n"
+        )
+
+    def sampler(self, tl, **kw):
+        return SystemSampler("host0", tl, proc_stat=self.stat,
+                             proc_diskstats=self.diskstats,
+                             proc_netdev=self.netdev, **kw)
+
+
+@pytest.fixture
+def fake_proc(tmp_path):
+    return FakeProc(tmp_path)
+
+
 class TestProcSamplers:
-    def test_read_proc_files(self):
-        cpu = read_cpu_sample()
-        assert cpu.total >= cpu.user > 0
-        disk = read_disk_sample()
-        assert disk.io_ticks_ms >= 0
-        net = read_net_sample()
-        assert net.bytes_total >= 0
+    def test_read_proc_files(self, fake_proc):
+        cpu = read_cpu_sample(fake_proc.stat)
+        assert cpu.user == 150  # user + nice
+        assert cpu.total == 100 + 50 + 30 + 1000 + 20 + 5
+        disk = read_disk_sample(fake_proc.diskstats)
+        assert disk.io_ticks_ms == 700  # sda only: partition + loop skipped
+        net = read_net_sample(fake_proc.netdev)
+        assert net.bytes_total == 8000  # eth0 rx+tx; loopback skipped
 
-    def test_sampler_produces_metrics(self):
+    def test_sampler_produces_metrics(self, fake_proc):
+        fake_now = [100.0]
         tl = ResourceTimeline()
-        s = SystemSampler("host0", tl, interval=0.05)
+        s = fake_proc.sampler(tl, clock=lambda: fake_now[0])
         s.sample_once()
-        time.sleep(0.05)
+        fake_now[0] += 2.0
+        fake_proc.write(user=120, nice=60, rest=(30, 1100, 20, 0, 5, 0, 0, 0),
+                        io_ticks=1200, rx=7000, tx=5000)
         s.sample_once()
-        for metric in ("cpu", "disk", "network"):
-            assert tl.window_mean("host0", metric, 0, time.time() + 1) is not None
+        assert s.healthy()
+        # cpu: d(user+nice)=30 over d(total)=130; disk: 500ms over 2s;
+        # network: 4000 bytes over 2s.
+        assert tl.window_mean("host0", "cpu", 0, 200) == pytest.approx(30 / 130)
+        assert tl.window_mean("host0", "disk", 0, 200) == pytest.approx(0.25)
+        assert tl.window_mean("host0", "network", 0, 200) == pytest.approx(2000.0)
 
-    def test_sampler_thread_lifecycle(self):
+    def test_sampler_thread_lifecycle(self, fake_proc):
         tl = ResourceTimeline()
-        with SystemSampler("host0", tl, interval=0.02):
+        with fake_proc.sampler(tl, interval=0.02):
             time.sleep(0.15)
         assert len(tl) >= 3
+
+
+class TestSamplerDegradation:
+    """The always-on bugfix: a missing /proc file (containers) must not kill
+    the sampler thread or starve the other metrics' Eq. 6 timelines."""
+
+    def test_missing_diskstats_skips_metric_keeps_others(self, fake_proc):
+        (fake_proc.root / "diskstats").unlink()
+        fake_now = [10.0]
+        tl = ResourceTimeline()
+        s = fake_proc.sampler(tl, clock=lambda: fake_now[0])
+        s.sample_once()
+        fake_now[0] += 1.0
+        s.sample_once()
+        assert not s.healthy()
+        assert s.missing_metrics() == ["disk"]
+        assert s.metric_health == {"cpu": True, "disk": False, "network": True}
+        assert s.read_errors["disk"] == 2
+        assert tl.window_mean("host0", "cpu", 0, 100) is not None
+        assert tl.window_mean("host0", "network", 0, 100) is not None
+        assert tl.window_mean("host0", "disk", 0, 100) is None
+
+    def test_source_recovering_mid_run_resumes_metric(self, fake_proc):
+        disk_content = (fake_proc.root / "diskstats").read_text()
+        (fake_proc.root / "diskstats").unlink()
+        fake_now = [10.0]
+        tl = ResourceTimeline()
+        s = fake_proc.sampler(tl, clock=lambda: fake_now[0])
+        s.sample_once()
+        assert s.missing_metrics() == ["disk"]
+        (fake_proc.root / "diskstats").write_text(disk_content)
+        fake_now[0] += 1.0
+        s.sample_once()           # first disk sample after recovery (no delta yet)
+        fake_now[0] += 1.0
+        s.sample_once()
+        assert s.healthy()
+        assert tl.window_mean("host0", "disk", 0, 100) is not None
+
+    def test_thread_survives_all_sources_missing(self, tmp_path):
+        tl = ResourceTimeline()
+        s = SystemSampler("host0", tl, interval=0.01,
+                          proc_stat=str(tmp_path / "nope1"),
+                          proc_diskstats=str(tmp_path / "nope2"),
+                          proc_netdev=str(tmp_path / "nope3"))
+        with s:
+            time.sleep(0.08)
+            assert s._thread.is_alive()
+        assert not s.healthy()
+        assert s.missing_metrics() == ["cpu", "disk", "network"]
+        assert s.ticks >= 2
+        assert len(tl) == 0
+
+    def test_sink_error_survives_thread_and_trips_health(self, fake_proc):
+        """A failure past the readers (timeline sink raising) must neither
+        kill the thread nor stay invisible: tick_errors counts it and
+        healthy() flips — then recovers once the sink does (no permanent
+        latch on a transient error)."""
+
+        class FlakyTimeline(ResourceTimeline):
+            fails = 3
+
+            def record(self, *a, **k):
+                if FlakyTimeline.fails > 0:
+                    FlakyTimeline.fails -= 1
+                    raise RuntimeError("sink down")
+                super().record(*a, **k)
+
+        def wait_for(cond, timeout=5.0):
+            deadline = time.time() + timeout
+            while time.time() < deadline:
+                if cond():
+                    return True
+                time.sleep(0.005)
+            return False
+
+        s = fake_proc.sampler(FlakyTimeline(), interval=0.01)
+        with s:
+            assert wait_for(lambda: s.tick_errors >= 1)
+            assert s._thread.is_alive()
+            assert all(s.metric_health.values())  # readers were fine
+            # sink recovers after its scripted failures → health recovers
+            assert wait_for(lambda: s.healthy())
+        assert s.tick_errors >= 1
+        assert s.healthy()                        # per-tick, not latched
+
+    def test_malformed_source_counts_as_unhealthy(self, fake_proc):
+        (fake_proc.root / "stat").write_text("garbage not-a-number\n")
+        tl = ResourceTimeline()
+        s = fake_proc.sampler(tl)
+        s.sample_once()
+        assert s.metric_health["cpu"] is False
+        assert s.metric_health["disk"] is True
 
 
 class TestStepTelemetry:

@@ -331,8 +331,115 @@ class TestStreamingTraceStore:
         stream = RootCauseStream(BigRootsAnalyzer(SPARK_FEATURES), w)
         first = stream.step()
         assert ("slow", "read_bytes") in {c.key for c in first}
-        assert stream.step() == []          # emit-once
+        assert stream.step() == []          # emit-once while hot
         assert stream.emitted == len(first)
+        st = stream.state(("slow", "read_bytes"))
+        assert st.confirmations == 2 and st.emits == 1 and st.severity == 1
+
+
+def _cause(task="t0", feature="read_bytes"):
+    from repro.core import FeatureKind, RootCause
+
+    return RootCause(task_id=task, stage_id="s", node="n0", feature=feature,
+                     kind=FeatureKind.NUMERICAL, value=2.0,
+                     peer_groups=("inter",))
+
+
+class _Scripted:
+    """Stub analyzer: hands RootCauseStream a scripted per-step cause list
+    (the stream's dedup/decay bookkeeping is what's under test, not the
+    analyzer)."""
+
+    def __init__(self, script):
+        self.script = script  # step (0-based) -> list[RootCause]
+        self.calls = 0
+
+    def analyze_stage(self, source):
+        causes = self.script(self.calls)
+        self.calls += 1
+        return StageAnalysis("s", 1, [], list(causes), 1.0)
+
+
+from repro.core import StageAnalysis  # noqa: E402
+
+
+class TestRootCauseStreamDecay:
+    def test_reemits_with_escalated_severity_after_decay(self):
+        confirm_at = {0, 1, 10, 11}  # hot at 0-1, clean 2-9, back at 10
+        an = _Scripted(lambda i: [_cause()] if i in confirm_at else [])
+        stream = RootCauseStream(an, object(), decay_steps=4)
+        assert [c.severity for c in stream.step()] == [1]   # step 1: fresh
+        assert stream.step() == []                          # step 2: dedup
+        for _ in range(8):                                  # steps 3-10 clean
+            assert stream.step() == []
+        out = stream.step()                                 # step 11: re-confirm
+        assert [c.severity for c in out] == [2]             # escalated re-emit
+        assert stream.step() == []                          # step 12: hot again
+        st = stream.state(("t0", "read_bytes"))
+        assert st.confirmations == 4 and st.emits == 2 and st.severity == 2
+        assert stream.reemitted == 1
+
+    def test_forget_drops_state_and_resets_severity(self):
+        confirm_at = {0, 50}
+        an = _Scripted(lambda i: [_cause()] if i in confirm_at else [])
+        stream = RootCauseStream(an, object(), decay_steps=2, forget_steps=10)
+        assert len(stream.step()) == 1
+        for _ in range(40):
+            stream.step()
+        assert stream.state(("t0", "read_bytes")) is None   # forgotten
+        assert stream.forgotten == 1
+        for _ in range(9):
+            stream.step()
+        out = stream.step()                                 # step 51: back
+        assert [c.severity for c in out] == [1]             # fresh, not escalated
+        assert len(stream.seen) == 1
+
+    def test_decay_none_is_legacy_unbounded_emit_once(self):
+        an = _Scripted(lambda i: [_cause(task=f"t{i}"), _cause()])
+        stream = RootCauseStream(an, object(), decay_steps=None)
+        for _ in range(50):
+            stream.step()
+        assert len(stream.seen) == 50           # every distinct key kept forever
+        assert stream.emitted == 50             # each key emitted exactly once
+        assert stream.reemitted == 0
+
+    def test_soak_10k_steps_bounded_with_reemergence(self):
+        """Acceptance: a 10k-step always-on loop with churning causes holds
+        ``seen`` bounded while a re-confirmed cause re-emits after decay."""
+        def script(i):
+            causes = [_cause(task=f"t{i % 300}")]     # churn: 300 rotating keys
+            if i in (5, 6000):                        # one long-gap recidivist
+                causes.append(_cause(task="recidivist"))
+            return causes
+
+        an = _Scripted(script)
+        stream = RootCauseStream(an, object(), decay_steps=64)  # forget = 512
+        high_water = 0
+        reemits = []
+        for _ in range(10_000):
+            for c in stream.step():
+                if c.task_id == "recidivist":
+                    reemits.append(c)
+            high_water = max(high_water, len(stream.seen))
+        # Bounded by the churn alphabet + stragglers, not by 10k steps of
+        # history (the legacy set would exceed 300 + 10k/300-ish immediately).
+        assert high_water <= 301 + 1
+        assert len(stream.seen) <= 301
+        assert stream.forgotten > 0
+        # The recidivist emitted at step 6 (fresh) and re-emitted escalated
+        # at step 6001 — its state decayed but had not yet been forgotten?
+        # No: 6001 - 6 > forget horizon, so it was forgotten and comes back
+        # fresh at severity 1.
+        assert [c.severity for c in reemits] == [1, 1]
+
+    def test_reemergence_inside_forget_horizon_escalates(self):
+        gaps = {0, 100, 200}
+        an = _Scripted(lambda i: [_cause()] if i in gaps else [])
+        stream = RootCauseStream(an, object(), decay_steps=16, forget_steps=500)
+        sev = []
+        for _ in range(201):
+            sev += [c.severity for c in stream.step()]
+        assert sev == [1, 2, 3]
 
 
 class TestTimelineCursor:
