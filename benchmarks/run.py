@@ -41,6 +41,7 @@ BENCHES = {
     "analyzer_scale": scale_bench.analyzer_scale,
     "streaming_scale": scale_bench.streaming_scale,
     "fleet_gates": scale_bench.fleet_gates,
+    "fleet_merge": scale_bench.fleet_merge,
     "kernels": scale_bench.kernel_bench,
     "e2e_train": scale_bench.e2e_train_bench,
 }
@@ -108,7 +109,8 @@ def main() -> None:
     if argv:
         wanted = argv
     elif check:
-        wanted = ["analyzer_scale", "streaming_scale", "fleet_gates"]
+        wanted = ["analyzer_scale", "streaming_scale", "fleet_gates",
+                  "fleet_merge"]
     else:
         wanted = list(BENCHES)
 

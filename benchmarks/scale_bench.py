@@ -368,6 +368,105 @@ def fleet_gates(n_windows: int = 8, rows: int = 16384, reps: int = 5):
     return rows_out, csv
 
 
+def fleet_merge(n_hosts: int = 8, rows_per_host: int = 2048, reps: int = 5):
+    """Launcher-side fleet aggregation: merge 8 per-host 2048-row windows
+    into one 16384-row fleet window and diagnose it, every tick.
+
+    - ``fleet_merge_8hosts_16384`` (CI-gated): one aggregation tick —
+      fresh merged window ← ``SlidingStageWindow.merge`` of all host
+      windows (column copies + exact aggregate recompute + P² re-anchor)
+      + one ``analyze_stage`` of the merged 16k-row view.
+    - ``fleet_wire_tick_8hosts_16384``: the full wire path per tick —
+      decode 8 serialized StepDeltas, bulk-ingest them into a fresh
+      FleetAggregator, one fleet diagnosis step.  Ungated (includes
+      Python-side JSON header parsing; documented, not raced).
+
+    The derived column cross-checks that the merged-window diagnosis
+    confirms exactly the causes of a single window that ingested the union
+    of all host rows directly (both sides exactly re-anchored, so the sets
+    must match outright).
+    """
+    from repro.serve.fleet import FleetAggregator
+    from repro.telemetry.events import StageDelta, StepDelta
+
+    an = BigRootsAnalyzer(JAX_FEATURES)
+    q = an.thresholds.quantile
+    host_cols = []
+    host_windows = []
+    for h in range(n_hosts):
+        cols = _incident_columns(rows_per_host, seed=300 + h)
+        cols["task_ids"] = [f"h{h}/t{i}" for i in range(rows_per_host)]
+        cols["nodes"] = [f"host{h}-n{i % 64}" for i in range(rows_per_host)]
+        w = SlidingStageWindow("s0", JAX_FEATURES, quantile=q)
+        w.add_rows(cols["task_ids"], cols["nodes"], cols["starts"],
+                   cols["ends"], feature_columns=cols["features"])
+        host_cols.append(cols)
+        host_windows.append(w)
+    n_live = n_hosts * rows_per_host
+
+    def merge_tick():
+        m = SlidingStageWindow("s0", JAX_FEATURES, quantile=q)
+        m.merge(*host_windows)
+        return an.analyze_stage(m)
+
+    merge_tick()  # warm
+    best = float("inf")
+    for _ in range(reps):
+        with Timer() as t:
+            sa = merge_tick()
+        best = min(best, t.seconds)
+    merge_us = best * 1e6
+
+    # Reference: the union ingested directly into one window.
+    union = SlidingStageWindow("s0", JAX_FEATURES, quantile=q)
+    union.add_rows(
+        [tid for c in host_cols for tid in c["task_ids"]],
+        [nd for c in host_cols for nd in c["nodes"]],
+        np.concatenate([c["starts"] for c in host_cols]),
+        np.concatenate([c["ends"] for c in host_cols]),
+        feature_columns={
+            k: np.concatenate([c["features"][k] for c in host_cols])
+            for k in host_cols[0]["features"]
+        },
+    )
+    diff = len(found_set(sa.root_causes)
+               ^ found_set(an.analyze_stage(union).root_causes))
+
+    payloads = [
+        StepDelta(f"h{h}", 1, [StageDelta(
+            "s0", c["task_ids"], c["nodes"], c["starts"], c["ends"],
+            np.zeros(rows_per_host, dtype=np.int16), c["features"],
+            {k: np.ones(rows_per_host, dtype=bool) for k in c["features"]},
+        )]).to_bytes()
+        for h, c in enumerate(host_cols)
+    ]
+
+    def wire_tick():
+        agg = FleetAggregator(JAX_FEATURES, an)
+        for p in payloads:
+            agg.ingest(p)
+        return agg.step()
+
+    wire_tick()  # warm
+    best = float("inf")
+    for _ in range(reps):
+        with Timer() as t:
+            wire_tick()
+        best = min(best, t.seconds)
+    wire_us = best * 1e6
+
+    tag = f"{n_hosts}hosts_{n_live}"
+    csv = [
+        (f"scale/fleet_merge_{tag}", merge_us,
+         f"merge+analyze per tick;stragglers={len(sa.straggler_ids)};"
+         f"cause_diff_vs_union={diff}"),
+        (f"scale/fleet_wire_tick_{tag}", wire_us,
+         f"decode+ingest+diagnose;bytes={sum(len(p) for p in payloads)}"),
+    ]
+    rows = [(n_live, merge_us, wire_us, diff)]
+    return rows, csv
+
+
 def kernel_bench():
     """Interpret-mode kernel timings vs jnp references (CPU walltime; the
     interesting column is allclose-verified equivalence + shapes)."""

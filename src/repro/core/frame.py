@@ -290,8 +290,11 @@ class _StageBuilder:
         self.extras: dict[int, dict[str, float]] = {}
         self._frame: StageFrame | None = None
 
-    def _grow(self) -> None:
-        cap = 2 * self.starts.shape[0]
+    def _grow(self, need: int | None = None) -> None:
+        cap = self.starts.shape[0]
+        need = 2 * cap if need is None else need
+        while cap < need:
+            cap *= 2
         for name in ("starts", "ends", "locality", "raw", "present"):
             old = getattr(self, name)
             new = np.zeros((cap,) + old.shape[1:], dtype=old.dtype)
@@ -332,6 +335,35 @@ class _StageBuilder:
         self.n += 1
         self._frame = None
 
+    def absorb(self, frame: StageFrame) -> None:
+        """Bulk-append another frame's rows as column copies — no TaskRecord
+        materialization.  Node names are decoded from the source vocabulary
+        in one vectorized gather; the *shared* vocabulary is rebuilt at the
+        next :meth:`seal` (``np.unique`` over the combined name column), so
+        disjoint and colliding per-host vocabularies both re-encode
+        correctly.  Rows land after all existing rows, preserving the
+        append-only ingest-order invariant ``seal`` relies on."""
+        m = len(frame)
+        if m == 0:
+            return
+        if self.n + m > self.starts.shape[0]:
+            self._grow(self.n + m)
+        i0 = self.n
+        sl = slice(i0, i0 + m)
+        self.task_ids.extend(frame.task_ids)
+        self.nodes.extend(
+            np.asarray(frame.node_names, dtype=object)[frame.node_codes].tolist()
+        )
+        self.starts[sl] = frame.starts
+        self.ends[sl] = frame.ends
+        self.locality[sl] = frame.locality
+        self.raw[sl] = frame.raw
+        self.present[sl] = frame.present
+        for r, ex in frame.extras.items():
+            self.extras[i0 + int(r)] = dict(ex)
+        self.n += m
+        self._frame = None
+
     def seal(self) -> StageFrame:
         # Rows are append-only, so handing out slice views is safe: a later
         # append writes past row n-1 (or into a fresh buffer after a grow)
@@ -356,6 +388,11 @@ class TraceStore:
     a :class:`TaskRecord` per task.  ``add_task``/``extend`` remain for
     dataclass sources, and JSONL persistence round-trips with
     :class:`~repro.core.records.Trace` byte-for-byte.
+
+    Multi-host aggregation: :meth:`merge` absorbs other stores column-wise
+    (per-stage block concatenation; the shared node vocabulary is rebuilt
+    at seal) — the launcher-side path for combining per-host traces into
+    one fleet trace without a TaskRecord round trip.
     """
 
     def __init__(self, schema: FeatureSchema,
@@ -389,6 +426,40 @@ class TraceStore:
     def extend(self, tasks: Iterable[TaskRecord]) -> None:
         for t in tasks:
             self.add_task(t)
+
+    def merge(self, *others: "TraceStore") -> "TraceStore":
+        """Absorb other stores' rows into this one, column-wise, in place.
+
+        For every stage of every ``other`` (in argument order), the stage's
+        column block is concatenated after this store's rows for the same
+        ``stage_id`` (a new stage is created when this store has none), so
+        ingest order is preserved per store and ``others`` append behind
+        existing rows.  Node codes are re-encoded through the merged
+        vocabulary when the stage next seals — disjoint and colliding
+        per-host node sets both come out correct.
+
+        Same-signature schemas take the columnar fast path (pure array
+        copies); a foreign schema falls back to re-ingest through the
+        TaskRecord view (correct, slower).  ``others`` are read, never
+        mutated.  Returns ``self`` for chaining.
+        """
+        if len({id(o) for o in others}) != len(others):
+            raise ValueError("the same store appears twice in a merge")
+        for other in others:
+            if other is self:
+                raise ValueError("cannot merge a TraceStore into itself")
+            columnar = other.schema.signature == self.schema.signature
+            for frame in other.stages():
+                if columnar:
+                    builder = self._builders.get(frame.stage_id)
+                    if builder is None:
+                        builder = self._builders[frame.stage_id] = _StageBuilder(
+                            frame.stage_id, self.schema
+                        )
+                    builder.absorb(frame)
+                else:
+                    self.extend(frame.tasks)
+        return self
 
     # -- access ------------------------------------------------------------
     def stages(self) -> Iterator[StageFrame]:

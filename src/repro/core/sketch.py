@@ -30,7 +30,11 @@ its sketch from the live rows at epoch boundaries (retirement pressure /
 compaction) via :meth:`P2ColumnSketch.reset_from`, which initializes the
 markers at the exact quantiles of the current window — between epochs the
 estimate covers live rows plus recently retired ones, and the drift is
-bounded by the rebuild policy (see ``SlidingStageWindow``).
+bounded by the rebuild policy (see ``SlidingStageWindow``).  The same
+mechanism makes multi-host merges exact: ``SlidingStageWindow.merge``
+ends in a ``reset_from`` over the merged live rows, so a fresh merge
+always answers the exact quantiles (``tests/test_merge.py`` pins this
+bit-for-bit).
 """
 from __future__ import annotations
 

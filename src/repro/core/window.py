@@ -56,8 +56,19 @@ re-anchors the sketch exactly from the live window (amortized O(changed)).
 Below :data:`~repro.core.sketch.MIN_SKETCH_SAMPLES` live rows the gate is
 exact ``np.quantile`` — tiny stages answer seed-identically.
 
+Multi-host merge
+----------------
+:meth:`SlidingStageWindow.merge` is the launcher-side aggregation
+primitive: it unions other windows' live rows into this one under a
+reconciled (max) watermark, re-encodes node codes through a shared
+vocabulary, then recomputes every running aggregate exactly and re-anchors
+the sketch — analyzing a merged window is byte-identical to analyzing the
+union of surviving rows (``tests/test_merge.py``).
+:meth:`StreamingTraceStore.merge` lifts it per stage, and
+:class:`repro.serve.FleetAggregator` drives it from per-host wire deltas.
+
 :class:`StreamingTraceStore` is the multi-stage container (TraceStore's
-streaming sibling): ``add_row`` routes to per-stage windows and
+streaming sibling): ``add_row``/``add_rows`` route to per-stage windows and
 ``stages()`` yields the windows themselves so ``analyzer.analyze(store)``
 takes the incremental path per stage.  :class:`RootCauseStream` is the
 in-loop driver face: analyze-after-each-step with emit-once deduping that
@@ -68,6 +79,7 @@ stays bounded over an unbounded serve loop (see the class docstring).
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, replace
 from typing import Iterator, Mapping, Sequence
 
@@ -81,6 +93,11 @@ from .sketch import MIN_SKETCH_SAMPLES, P2ColumnSketch, exact_quantile
 
 class SlidingStageWindow:
     """One stage as a sliding window of task rows with running aggregates.
+
+    Ingest via :meth:`add_row` (per task) or :meth:`add_rows` (one step's
+    columnar fleet report); retire via :meth:`advance` / ``max_rows``;
+    analyze incrementally with ``BigRootsAnalyzer.analyze_stage(window)``;
+    union per-host windows launcher-side with :meth:`merge`.
 
     Parameters
     ----------
@@ -103,6 +120,11 @@ class SlidingStageWindow:
     """
 
     _INITIAL = 64
+    #: Process-wide creation counter: `uid` distinguishes a window object
+    #: from a later one recreated under the same stage_id (consumers that
+    #: cache per-stage state, e.g. RootCauseStream's change stamps, key on
+    #: it so a drop-and-recreate never aliases the old window).
+    _uids = itertools.count()
 
     def __init__(
         self,
@@ -119,6 +141,7 @@ class SlidingStageWindow:
         # streaming aggregates, no retirement).
         self.stage_id = stage_id
         self.schema = schema
+        self.uid = next(SlidingStageWindow._uids)
         self.span = None if span is None else float(span)
         self.max_rows = None if max_rows is None else int(max_rows)
         self.quantile = float(quantile)
@@ -241,6 +264,7 @@ class SlidingStageWindow:
         ends: np.ndarray,
         locality: np.ndarray | None = None,
         feature_columns: Mapping[str, np.ndarray] | None = None,
+        present_columns: Mapping[str, np.ndarray] | None = None,
     ) -> int:
         """Columnar bulk ingest (one step's fleet report): vectorized over
         the batch.  Rows already behind the watermark are dropped; returns
@@ -252,7 +276,13 @@ class SlidingStageWindow:
         the same silent-extras semantics as :meth:`add_row` and the
         TaskRecord dict ingest (telemetry rows carry arbitrary counters),
         deliberately unlike ``StageFrame.from_columns`` which raises.
-        Extras never participate in gating."""
+        Extras never participate in gating.
+
+        ``present_columns`` optionally carries a per-row bool mask per
+        feature column: a row whose mask is False is treated as if its
+        feature dict lacked the entry (recorded-as-0.0 vs absent — the
+        distinction the wire format preserves so sealed TaskRecord views
+        round-trip exactly).  Masked-out extras are dropped per row."""
         starts = np.asarray(starts, dtype=np.float64)
         ends = np.asarray(ends, dtype=np.float64)
         m_in = len(task_ids)
@@ -269,6 +299,10 @@ class SlidingStageWindow:
                 feature_columns = {
                     nm: np.asarray(c)[sel] for nm, c in feature_columns.items()
                 }
+            if present_columns:
+                present_columns = {
+                    nm: np.asarray(c)[sel] for nm, c in present_columns.items()
+                }
         m = len(task_ids)
         if m == 0:
             return 0
@@ -280,20 +314,30 @@ class SlidingStageWindow:
             np.asarray(locality, dtype=np.int16)
             if locality is not None else np.zeros(m, dtype=np.int16)
         )
-        extra_cols: list[tuple[str, np.ndarray]] = []
+        extra_cols: list[tuple[str, np.ndarray, np.ndarray | None]] = []
         for name, vals in (feature_columns or {}).items():
             j = col.get(name)
-            if j == loc_j and j is not None:
-                raise ValueError(
-                    "the locality column is owned by the task field: pass "
-                    "locality=... instead of a 'locality' feature column"
+            mask = (
+                np.asarray(present_columns[name], dtype=bool)
+                if present_columns and name in present_columns else None
+            )
+            if j is None or j == loc_j:
+                # Outside the schema — or shadowing the locality *field*,
+                # which owns that column: keep per-row as extras, exactly
+                # the add_row dict semantics (telemetry counters are
+                # arbitrary names; the wire path must not die on one).
+                extra_cols.append(
+                    (name, np.asarray(vals, dtype=np.float64), mask)
                 )
-            if j is None:
-                # Outside the schema: keep per-row, same as add_row.
-                extra_cols.append((name, np.asarray(vals, dtype=np.float64)))
                 continue
-            raw[:, j] = np.asarray(vals, dtype=np.float64)
-            present[:, j] = True
+            vals = np.asarray(vals, dtype=np.float64)
+            if mask is None:
+                raw[:, j] = vals
+                present[:, j] = True
+            else:
+                # Masked-out rows behave exactly as an absent dict entry.
+                raw[:, j] = np.where(mask, vals, 0.0)
+                present[:, j] = mask
         if loc_j is not None:
             raw[:, loc_j] = loc
         v = raw.copy()
@@ -314,9 +358,10 @@ class SlidingStageWindow:
         self._v[sl] = v
         self._node_codes[sl] = codes
         self._live[sl] = True
-        for name, vals in extra_cols:
-            for r, val in enumerate(vals.tolist()):
-                self._extras.setdefault(i0 + r, {})[name] = val
+        for name, vals, mask in extra_cols:
+            keep_rows = range(m) if mask is None else np.nonzero(mask)[0].tolist()
+            for r in keep_rows:
+                self._extras.setdefault(i0 + int(r), {})[name] = float(vals[r])
         self._n += m
         self.live_count += m
         self.total_added += m
@@ -335,6 +380,118 @@ class SlidingStageWindow:
         self._enforce_max_rows()
         self._maybe_anchor()
         return m
+
+    # -- multi-host merge --------------------------------------------------
+    def merge(self, *others: "SlidingStageWindow") -> int:
+        """Union other windows' live rows into this one (launcher-side
+        fleet aggregation).  Returns the number of rows ingested.
+
+        Semantics, in order:
+
+        1. **Watermark reconciliation** — the merged watermark is the max
+           over all participants; this window's own live rows at or behind
+           it retire (tombstoned, counted in ``retired_total``), and
+           another window's live rows behind it are refused on arrival
+           (counted in ``late_drops``) — exactly the ``add_row`` late-row
+           rule, so "live iff end > watermark" holds fleet-wide.
+        2. **Union** — each other's surviving live rows are bulk-copied
+           behind this window's rows in argument order (SoA column copies;
+           gate-space ``v`` is copied, not recomputed — it is per-row-fixed).
+           Node codes re-encode through this window's append-only node
+           table, so disjoint and colliding per-host vocabularies both
+           merge into one shared vocabulary.
+        3. **Exact reconciliation** — every running aggregate (count, Σv,
+           Σv², per-node sums) is recomputed exactly from the merged live
+           rows and the P² sketch is re-anchored exactly (epoch
+           compaction), cancelling each participant's accumulated float
+           drift: analyzing the merged window is byte-identical to
+           analyzing a window that ingested the union of surviving rows in
+           merged order.  ``max_rows`` is then enforced as usual.
+
+        ``others`` are read, never mutated.  Schemas must share a
+        signature (a foreign schema raises — seal and re-ingest instead).
+        The merged sketch tracks *this* window's ``quantile``.
+        """
+        if len({id(o) for o in others}) != len(others):
+            raise ValueError("the same window appears twice in a merge")
+        wm = self.watermark
+        for o in others:
+            if o is self:
+                raise ValueError("cannot merge a window into itself")
+            if o.schema.signature != self.schema.signature:
+                raise ValueError(
+                    f"schema mismatch merging stage {o.stage_id!r} into "
+                    f"{self.stage_id!r}: seal() and re-ingest instead"
+                )
+            wm = max(wm, o.watermark)
+
+        # 1. Retire own rows behind the merged watermark.  Aggregates are
+        # recomputed exactly below, so only the masks/counters move here.
+        retired = 0
+        if wm > self.watermark:
+            self.watermark = wm
+            dead = self._live[: self._n] & (self._ends[: self._n] <= wm)
+            idx = np.nonzero(dead)[0]
+            if idx.size:
+                self._tombstone(idx)
+                self.retired_total += int(idx.size)
+                retired += int(idx.size)
+
+        # 2. Bulk-append each other's surviving live rows.  Capacity for
+        # the whole union is reserved once up front: per-source reserves
+        # would trigger mid-merge epoch compactions whose exact recomputes
+        # the final compaction discards anyway.
+        picks: list[tuple[SlidingStageWindow, np.ndarray]] = []
+        total = 0
+        for o in others:
+            idx = o.live_index()
+            if idx.size:
+                keep = o._ends[idx] > wm
+                if not keep.all():
+                    self.late_drops += int(idx.size - keep.sum())
+                    idx = idx[keep]
+            if idx.size:
+                picks.append((o, idx))
+                total += int(idx.size)
+        if total:
+            self._reserve(total)  # may epoch-compact once; aggregates redone below
+        ingested = 0
+        for o, idx in picks:
+            m = int(idx.size)
+            # Shared vocabulary: re-encode the other's codes through this
+            # window's node table (grows it; dead nodes hold zero counts).
+            remap = np.fromiter(
+                (self._node_code(nm) for nm in o._node_names),
+                dtype=np.int64, count=len(o._node_names),
+            )
+            i0 = self._n
+            sl = slice(i0, i0 + m)
+            self._task_ids[sl] = o._task_ids[idx]
+            self._starts[sl] = o._starts[idx]
+            self._ends[sl] = o._ends[idx]
+            self._durs[sl] = o._durs[idx]
+            self._locality[sl] = o._locality[idx]
+            self._raw[sl] = o._raw[idx]
+            self._present[sl] = o._present[idx]
+            self._v[sl] = o._v[idx]
+            self._node_codes[sl] = remap[o._node_codes[idx]]
+            self._live[sl] = True
+            if o._extras:
+                for r, oi in enumerate(idx.tolist()):
+                    ex = o._extras.get(oi)
+                    if ex is not None:
+                        self._extras[i0 + r] = dict(ex)
+            self._n += m
+            self.live_count += m
+            self.total_added += m
+            self.t_max = max(self.t_max, float(o._ends[idx].max()))
+            ingested += m
+
+        # 3. Exact reconciliation (no-op merge skips it: nothing changed).
+        if ingested or retired:
+            self._compact(self._starts.shape[0])
+            self._enforce_max_rows()
+        return ingested
 
     # -- retirement --------------------------------------------------------
     def advance(self, now: float | None = None) -> int:
@@ -377,20 +534,28 @@ class SlidingStageWindow:
         self._retire_rows(rows)
         return int(dead.size)
 
+    def _tombstone(self, idx: np.ndarray) -> None:
+        """Clear live flags for rows ``idx`` and maintain the contiguity
+        fast-path bookkeeping (head retirement keeps the live block a
+        slice; anything else degrades to fancy indexing until the next
+        compaction).  Aggregates and retirement counters are the caller's
+        job — merge recomputes them exactly, _retire_rows subtracts."""
+        self._live[idx] = False
+        if self._contig:
+            lo, hi = int(idx.min()), int(idx.max())
+            if lo == self._live_lo and hi - lo + 1 == idx.size:
+                self._live_lo = hi + 1
+            else:
+                self._contig = False
+        self.live_count -= int(idx.size)
+
     def _retire_rows(self, idx: np.ndarray) -> None:
         v = self._v[idx]
         self.vsum -= v.sum(axis=0)
         self.vsumsq -= (v * v).sum(axis=0)
         self.locality_sum -= float(self._locality[idx].sum())
         self._scatter(self._node_codes[idx], v, -1.0)
-        self._live[idx] = False
-        if self._contig:
-            lo, hi = int(idx.min()), int(idx.max())
-            if lo == self._live_lo and hi - lo + 1 == idx.size:
-                self._live_lo = hi + 1     # head retirement: still a slice
-            else:
-                self._contig = False
-        self.live_count -= idx.size
+        self._tombstone(idx)
         self.retired_total += idx.size
         self._sketch_lag += idx.size
         self._q_cache = None
@@ -686,16 +851,32 @@ class StreamingTraceStore:
         locality: int = 0,
         features: Mapping[str, float] | None = None,
     ) -> bool:
-        w = self._windows.get(stage_id)
-        if w is None:
-            w = self._windows[stage_id] = SlidingStageWindow(
-                stage_id, self.schema, span=self.span,
-                max_rows=self.max_rows, quantile=self.quantile,
-            )
+        w = self.window_for(stage_id)
         ok = w.add_row(task_id, node, start, end, locality, features)
         if ok and self.span is not None:
             w.advance()
         return ok
+
+    def add_rows(
+        self,
+        stage_id: str,
+        task_ids: Sequence[str],
+        nodes: Sequence[str],
+        starts: np.ndarray,
+        ends: np.ndarray,
+        locality: np.ndarray | None = None,
+        feature_columns: Mapping[str, np.ndarray] | None = None,
+        present_columns: Mapping[str, np.ndarray] | None = None,
+    ) -> int:
+        """Columnar bulk ingest into one stage's window (see
+        :meth:`SlidingStageWindow.add_rows`); creates the window on first
+        sight and advances its watermark under a time ``span``."""
+        w = self.window_for(stage_id)
+        m = w.add_rows(task_ids, nodes, starts, ends, locality,
+                       feature_columns, present_columns)
+        if m and self.span is not None:
+            w.advance()
+        return m
 
     def add_task(self, task: TaskRecord) -> bool:
         return self.add_row(task.task_id, task.stage_id, task.node,
@@ -704,6 +885,39 @@ class StreamingTraceStore:
     def extend(self, tasks) -> None:
         for t in tasks:
             self.add_task(t)
+
+    def window_for(self, stage_id: str) -> SlidingStageWindow:
+        """The stage's live window, created on first sight with this
+        store's span/max_rows/quantile configuration."""
+        w = self._windows.get(stage_id)
+        if w is None:
+            w = self._windows[stage_id] = SlidingStageWindow(
+                stage_id, self.schema, span=self.span,
+                max_rows=self.max_rows, quantile=self.quantile,
+            )
+        return w
+
+    def merge(self, *others: "StreamingTraceStore") -> int:
+        """Union other streaming stores into this one, per stage, via
+        :meth:`SlidingStageWindow.merge` (watermark reconciliation +
+        exact aggregate/sketch re-anchor per window).  Windows are created
+        for stages this store has not seen.  Returns total rows ingested;
+        ``others`` are never mutated."""
+        if len({id(o) for o in others}) != len(others):
+            raise ValueError("the same store appears twice in a merge")
+        ingested = 0
+        for other in others:
+            if other is self:
+                raise ValueError("cannot merge a StreamingTraceStore into itself")
+            for w in other.stages():
+                ingested += self.window_for(w.stage_id).merge(w)
+        return ingested
+
+    def drop_stage(self, stage_id: str) -> bool:
+        """Forget a stage's window entirely (fleet-aggregation retention:
+        an always-on loop opens a new step-window stage every N steps and
+        must shed exhausted ones to stay bounded)."""
+        return self._windows.pop(stage_id, None) is not None
 
     def window(self, stage_id: str) -> SlidingStageWindow:
         return self._windows[stage_id]
@@ -800,16 +1014,64 @@ class RootCauseStream:
         self.emitted = 0
         self.reemitted = 0
         self.forgotten = 0
+        # Per-stage content stamps for StreamingTraceStore sources: a
+        # window whose (uid, total_added, retired_total) is unchanged since
+        # the last step is skipped — its rows, and therefore its analysis,
+        # are identical, so re-running it would only burn the sweep budget
+        # and keep re-confirming stale causes forever (blocking
+        # decay/forget).  The uid guards against a stage dropped and
+        # recreated between steps aliasing the old stamp.
+        self._window_stamps: dict[str, tuple[int, int, int]] = {}
 
     def state(self, key: tuple[str, str]) -> CauseState | None:
         return self.seen.get(key)
 
     def step(self) -> list:
         if isinstance(self.source, StreamingTraceStore):
-            analyses = self.analyzer.analyze(self.source)
+            # Multi-window source: one batched fleet sweep per step when
+            # the analyzer offers it (byte-identical to the per-window
+            # loop, one gate launch instead of W — see analyze_fleet),
+            # over the *changed* windows only: an always-on loop retains
+            # exhausted stage windows, and re-analyzing frozen rows every
+            # step both multiplies sweep cost by the retention cap and
+            # re-confirms stale causes forever (defeating decay/forget).
+            all_windows = list(self.source.stages())
+            stamps = {
+                w.stage_id: (w.uid, w.total_added, w.retired_total)
+                for w in all_windows
+            }
+            # Row-stamp purity has one exception: Eq. 6 edge detection
+            # reads the live ResourceTimeline, whose samples covering a
+            # task's tail window ([end, end+edge_width]) arrive *after*
+            # the row does.  Until the fleet clock (max t_max) passes a
+            # window's last end + edge_width, its resource verdicts can
+            # still change, so it stays in the sweep even when unchanged.
+            settle = 0.0
+            if getattr(self.analyzer, "timelines", None) is not None:
+                th = getattr(self.analyzer, "thresholds", None)
+                settle = float(getattr(th, "edge_width", 0.0) or 0.0)
+            now = max((w.t_max for w in all_windows), default=-np.inf)
+            windows = [
+                w for w in all_windows
+                if self._window_stamps.get(w.stage_id) != stamps[w.stage_id]
+                or (settle > 0.0 and w.t_max + settle > now)
+            ]
+            fleet = getattr(self.analyzer, "analyze_fleet", None)
+            if fleet is not None:
+                analyses = fleet(windows)
+            else:
+                analyses = [self.analyzer.analyze_stage(w) for w in windows]
+            # Mark windows seen only after their analysis ran: a raise
+            # above leaves them pending, so a caller that survives a
+            # transient analyzer failure retries them next tick instead of
+            # skipping their causes forever.  (Dropped stages fall out.)
+            self._window_stamps = stamps
         else:
             analyses = [self.analyzer.analyze_stage(self.source)]
-        self.last_analysis = analyses[-1] if analyses else None
+        # Keep the previous analysis through idle ticks (all windows
+        # unchanged → nothing re-analyzed).
+        if analyses:
+            self.last_analysis = analyses[-1]
         self.steps += 1
         step = self.steps
         decay = self.decay_steps

@@ -5,9 +5,12 @@ Runs a real JAX training loop (any --arch, reduced or full config) with:
   - per-step phase timing + /proc resource sampling → TaskRecords
     (stage = window of steps; on a single host the peer set is the step
     window, BigRoots' intra-node observation),
-  - *in-loop* BigRoots diagnosis every step: telemetry mirrors rows into a
-    sliding stage window and the incremental analyzer emits newly
-    confirmed RootCauses live (``--no-live-diagnose`` to disable),
+  - *in-loop* BigRoots diagnosis every step through the fleet-aggregation
+    path: telemetry cuts a columnar StepDelta per step, a FleetAggregator
+    merges it into per-stage sliding windows, and one fleet-wide
+    ``analyze_fleet`` sweep emits newly confirmed RootCauses live — the
+    same launcher-side pipeline a multi-host job shards over
+    (``--no-live-diagnose`` to disable),
   - optional live anomaly generators injected mid-run (the paper's §IV-B
     verification, on the real host),
   - checkpointing (atomic/async/retention) + supervised restart,
@@ -36,7 +39,6 @@ from ..core import (
     BigRootsAnalyzer,
     JAX_FEATURES,
     PCCAnalyzer,
-    RootCauseStream,
     evaluate,
     found_set,
     render_markdown,
@@ -45,6 +47,7 @@ from ..core import (
 from ..data.pipeline import DataConfig, HostDataLoader, Prefetcher
 from ..ft.mitigation import MitigationPlanner
 from ..models import Model, smoke_variant
+from ..serve.fleet import FleetAggregator
 from ..telemetry.events import GcTimer, StepTelemetry
 from ..telemetry.sampler import SystemSampler
 from ..telemetry.timeline import ResourceTimeline
@@ -69,8 +72,9 @@ def build_argparser() -> argparse.ArgumentParser:
                     action="store_false", default=True,
                     help="disable in-loop (per-step) BigRoots diagnosis")
     ap.add_argument("--live-window", type=int, default=0,
-                    help="sliding live-diagnosis window in steps "
-                         "(default: --window)")
+                    help="live-diagnosis row cap per merged stage window "
+                         "(default: unbounded; stages are already bounded "
+                         "by --window steps per host)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--async-ckpt", action="store_true")
@@ -120,14 +124,19 @@ def run(args) -> dict:
     live_diagnose = getattr(args, "live_diagnose", True)
     telem = StepTelemetry(
         args.host, timeline=timeline, window=args.window, gc_timer=gc_timer,
-        streaming=live_diagnose,
-        stream_max_rows=(getattr(args, "live_window", 0) or args.window),
+        wire=live_diagnose,
     )
-    live_stream = None
+    # Live diagnosis runs through the launcher's fleet-aggregation path —
+    # per-step StepDeltas merged into per-stage windows, one analyze_fleet
+    # sweep per step.  On this single-host driver it is a fleet of one;
+    # a multi-host launcher feeds the same aggregator N deltas per tick.
+    fleet = None
     if live_diagnose:
-        live_stream = RootCauseStream(
+        fleet = FleetAggregator(
+            JAX_FEATURES,
             BigRootsAnalyzer(JAX_FEATURES, timelines=timeline),
-            telem.live_window,
+            max_rows=(getattr(args, "live_window", 0) or None),
+            max_stages=8,
         )
     live_causes: list[dict] = []
 
@@ -168,8 +177,9 @@ def run(args) -> dict:
                         ckpt.save(step, state["params"],
                                   blocking=not args.async_ckpt)
             losses.append(loss)
-            if live_stream is not None:
-                for cause in live_stream.step():
+            if fleet is not None:
+                fleet.ingest_host(telem)
+                for cause in fleet.step():
                     live_causes.append({
                         "step": step, "task": cause.task_id,
                         "feature": cause.feature, "value": cause.value,

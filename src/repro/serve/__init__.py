@@ -1,4 +1,8 @@
-"""Serving substrate: batched prefill/decode engine with KV/state caches."""
+"""Serving substrate: batched prefill/decode engine with KV/state caches,
+plus the launcher-side :class:`FleetAggregator` for merged fleet-wide
+in-loop diagnosis (sharded per-host telemetry → one BigRoots sweep)."""
 from .engine import ServeEngine, make_decode_step, make_prefill_step
+from .fleet import FleetAggregator
 
-__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step"]
+__all__ = ["FleetAggregator", "ServeEngine", "make_decode_step",
+           "make_prefill_step"]

@@ -10,6 +10,17 @@ With a streaming telemetry (``StepTelemetry(streaming=True)``) and a
 decode step: newly confirmed root causes land in
 ``engine.live_root_causes`` while the batch is still decoding, instead of
 in a post-hoc report.
+
+With a wire telemetry (``StepTelemetry(wire=True)``) and a shared
+:class:`~repro.serve.fleet.FleetAggregator`, the engine instead drains its
+per-step delta into the aggregator and runs the *fleet-wide* merged
+diagnosis — many engines (hosts) feeding one aggregator get one cross-node
+sweep per step instead of N per-host ones.  When several engines share the
+aggregator, exactly one party should drive the sweep: either construct the
+others with ``fleet_step=False`` (they only ingest) or pass
+``fleet_step=False`` everywhere and call ``aggregator.step()`` from the
+launcher once per tick — N engines each stepping would run N sweeps per
+tick and advance the dedup stream's decay clock N× too fast.
 """
 from __future__ import annotations
 
@@ -24,6 +35,7 @@ import numpy as np
 from ..core.window import RootCauseStream
 from ..models.api import Model
 from ..telemetry.events import StepTelemetry
+from .fleet import FleetAggregator
 
 
 def make_prefill_step(model: Model) -> Callable:
@@ -73,6 +85,8 @@ class ServeEngine:
         telemetry: StepTelemetry | None = None,
         eos_id: int | None = None,
         live_analyzer=None,
+        fleet: FleetAggregator | None = None,
+        fleet_step: bool = True,
     ) -> None:
         self.model = model
         self.params = params
@@ -84,10 +98,18 @@ class ServeEngine:
         self._prefill = jax.jit(make_prefill_step(model))
         self._decode = jax.jit(make_decode_step(model, temperature))
         self._key = jax.random.key(0)
-        # In-loop diagnosis: requires a streaming telemetry (live_window).
+        # In-loop diagnosis: per-host (streaming telemetry + live_analyzer)
+        # or fleet-wide (wire telemetry + shared FleetAggregator).
         self.diagnosis: RootCauseStream | None = None
+        self.fleet = fleet
+        self.fleet_step = fleet_step
         self.live_root_causes: list = []
-        if (
+        if fleet is not None:
+            if telemetry is None or not telemetry.wire:
+                raise ValueError(
+                    "fleet aggregation needs StepTelemetry(wire=True)"
+                )
+        elif (
             live_analyzer is not None
             and telemetry is not None
             and telemetry.live_window is not None
@@ -133,7 +155,11 @@ class ServeEngine:
                         nxt, cache = self._decode_once(nxt, cache)
                         jax.block_until_ready(nxt)
                     scope.add("read_bytes", float(nxt.size * 4))
-                if self.diagnosis is not None:
+                if self.fleet is not None:
+                    self.fleet.ingest_host(self.telemetry)
+                    if self.fleet_step:
+                        self.live_root_causes.extend(self.fleet.step())
+                elif self.diagnosis is not None:
                     self.live_root_causes.extend(self.diagnosis.step())
             else:
                 nxt, cache = self._decode_once(nxt, cache)

@@ -1,0 +1,234 @@
+"""Launcher-side fleet aggregation: merged, fleet-wide in-loop diagnosis.
+
+BigRoots' premise is cross-node comparison — a task is only a straggler,
+and a cause only a root cause, *relative to its peers* (Eq. 5 peer-mean
+gates, Eq. 6 system-feature windows).  N per-host analyzers each looking
+at their own window therefore see N one-node stages with no inter-node
+peer group at all; the diagnostic signal only exists after the per-host
+traces are merged (the sharded-ingest + central-merge architecture of the
+what-if straggler and HybridTune studies).
+
+:class:`FleetAggregator` is that central merge point for the streaming
+substrate:
+
+- per-host producers run ``StepTelemetry(wire=True)`` and ship
+  :class:`~repro.telemetry.events.StepDelta` blocks (columnar wire format
+  — bytes across processes, the object in-process);
+- the aggregator routes each delta's stage blocks into merged
+  :class:`~repro.core.window.SlidingStageWindow`\\ s (one per stage id, so
+  hosts sharing a step-window stage pool into one cross-node peer set);
+- :meth:`step` drives ``BigRootsAnalyzer.analyze_fleet`` over *all* merged
+  windows in one batched gate evaluation and dedups emissions through a
+  :class:`~repro.core.window.RootCauseStream` — one fleet-wide in-loop
+  diagnosis per tick instead of N per-host ones.
+
+Pre-populated per-host stores (e.g. recovered from a crashed launcher)
+enter through :meth:`merge_stores`, which uses the column-level
+``SlidingStageWindow.merge`` (exact aggregate recompute + P² re-anchor).
+
+    agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+    ... each tick ...
+    for host_telem in host_telemetries:
+        agg.ingest(host_telem.drain_delta())      # or .to_bytes() payloads
+    for cause in agg.step():
+        log.warning("fleet straggler %s <- %s", cause.task_id, cause.feature)
+"""
+from __future__ import annotations
+
+from ..core.analyzer import BigRootsAnalyzer
+from ..core.features import FeatureSchema
+from ..core.window import RootCauseStream, StreamingTraceStore
+from ..telemetry.events import StepDelta, StepTelemetry
+
+
+class FleetAggregator:
+    """Consume per-host :class:`StepDelta` streams, maintain merged
+    per-stage windows, and run one fleet-wide diagnosis per step.
+
+    Parameters
+    ----------
+    schema:
+        Feature schema shared by every producing host.
+    analyzer:
+        The :class:`~repro.core.analyzer.BigRootsAnalyzer` driving
+        :meth:`step` (``analyze_fleet`` when available).  Defaults to a
+        plain analyzer over ``schema``; pass one with ``timelines`` wired
+        for Eq. 6 edge detection and ``backend="jax"``/``"pallas"`` for
+        kernel-batched sweeps.
+    span, max_rows:
+        Per-stage window retention, as for
+        :class:`~repro.core.window.SlidingStageWindow`.  ``max_rows`` is
+        per merged stage window (the *fleet* row budget, not per host).
+    decay_steps, forget_steps:
+        Emission dedup/decay policy, as for
+        :class:`~repro.core.window.RootCauseStream`.
+    max_stages:
+        Retention cap on distinct stage windows: when a new stage would
+        exceed it, the oldest-created windows are dropped (an always-on
+        loop opens a fresh step-window stage every N steps; exhausted ones
+        must not accumulate).  ``None`` disables.
+
+    Duplicate delivery and restarts: deltas carry ``(boot, seq)`` — the
+    producer incarnation stamp and its per-drain counter.  The aggregator
+    keeps a per-incarnation seq watermark (a small bounded map of recent
+    boots per host): a delta whose seq is not newer than its own boot's
+    watermark is dropped whole (``duplicate_drops``), so at-least-once
+    transports stay safe without idempotence bookkeeping downstream —
+    provided delivery is in-order per host (TCP-like FIFO): the watermark
+    cannot tell a delayed first delivery from a redelivery, so a
+    transport that *reorders* must not be used without resequencing,
+    while a delta under a boot not seen before is a restarted host —
+    accepted immediately (``host_restarts``), with no dependence on clock
+    direction (a restart after a backward NTP step or snapshot restore is
+    not exiled).  Steps a host re-executes after restoring from a
+    checkpoint arrive as new rows under the new boot — deliberately:
+    re-executed work is re-measured work, and no task-id dedup is
+    attempted inside the windows.
+
+    Stage blocks addressed to a stage this aggregator already pruned are
+    dropped (``stale_stage_drops``) rather than resurrecting the stage as
+    a one-host window with a degenerate peer set.
+    """
+
+    #: Incarnations remembered per host for duplicate detection; beyond
+    #: this, the oldest-seen boot's watermark is forgotten (a redelivery
+    #: from an incarnation that many generations dead would re-ingest).
+    _MAX_BOOTS_PER_HOST = 4
+
+    def __init__(
+        self,
+        schema: FeatureSchema,
+        analyzer: BigRootsAnalyzer | None = None,
+        *,
+        span: float | None = None,
+        max_rows: int | None = None,
+        decay_steps: int | None = 256,
+        forget_steps: int | None = None,
+        max_stages: int | None = 64,
+    ) -> None:
+        self.schema = schema
+        self.analyzer = analyzer if analyzer is not None else BigRootsAnalyzer(schema)
+        quantile = getattr(
+            getattr(self.analyzer, "thresholds", None), "quantile", 0.9
+        )
+        self.store = StreamingTraceStore(
+            schema, span=span, max_rows=max_rows, quantile=quantile,
+        )
+        self.stream = RootCauseStream(
+            self.analyzer, self.store,
+            decay_steps=decay_steps, forget_steps=forget_steps,
+        )
+        self.max_stages = max_stages
+        # host → {boot: last accepted seq}, newest-seen boots last; capped
+        # at _MAX_BOOTS_PER_HOST incarnations (see ingest).
+        self.host_seq: dict[str, dict[int, int]] = {}
+        self.deltas_ingested = 0
+        self.rows_ingested = 0
+        self.bytes_ingested = 0
+        self.duplicate_drops = 0
+        self.host_restarts = 0
+        self.stages_dropped = 0
+        self.stale_stage_drops = 0
+        # Insertion-ordered tombstones of pruned stage ids (bounded): a
+        # straggling host's late delta must not resurrect a pruned stage.
+        self._pruned: dict[str, None] = {}
+
+    # -- ingest ------------------------------------------------------------
+    def ingest(self, delta: StepDelta | bytes) -> int:
+        """Route one host delta (object or wire bytes) into the merged
+        windows.  Returns rows ingested (0 for duplicates/empty deltas)."""
+        if isinstance(delta, (bytes, bytearray, memoryview)):
+            self.bytes_ingested += len(delta)
+            delta = StepDelta.from_bytes(bytes(delta))
+        boots = self.host_seq.setdefault(delta.host, {})
+        last_seq = boots.get(delta.boot)
+        if last_seq is not None and delta.seq <= last_seq:
+            # Redelivery within a known incarnation: drop whole
+            # (at-least-once transports are safe).
+            self.duplicate_drops += 1
+            return 0
+        if last_seq is None and boots:
+            # Unseen incarnation of a known host: it restarted.  Accept
+            # immediately — no starvation while the reborn producer
+            # re-earns its pre-crash seq, and no wall-clock comparison (a
+            # restart after a backward clock step is not exiled).
+            self.host_restarts += 1
+        if self._pruned:
+            live_stages = [s for s in delta.stages
+                           if s.stage_id not in self._pruned]
+            if len(live_stages) != len(delta.stages):
+                self.stale_stage_drops += len(delta.stages) - len(live_stages)
+                delta = StepDelta(delta.host, delta.seq, live_stages,
+                                  boot=delta.boot)
+        rows = delta.apply_to(self.store)
+        # Commit the watermark only after the delta applied: a delta that
+        # raised mid-apply stays un-acked, so its at-least-once retry is
+        # re-attempted instead of dropped as a duplicate (a partial first
+        # attempt can double-ingest some stage blocks on retry —
+        # preferable to losing the rows outright).  Keep only the most
+        # recent incarnations per host.
+        boots.pop(delta.boot, None)      # re-append as newest-seen
+        boots[delta.boot] = delta.seq
+        while len(boots) > self._MAX_BOOTS_PER_HOST:
+            del boots[next(iter(boots))]
+        self.deltas_ingested += 1
+        self.rows_ingested += rows
+        self._prune_stages()
+        return rows
+
+    def ingest_host(self, telem: StepTelemetry) -> int:
+        """In-process convenience: drain ``telem``'s pending rows and
+        ingest them (no serialization round trip)."""
+        return self.ingest(telem.drain_delta())
+
+    def merge_stores(self, *stores: StreamingTraceStore) -> int:
+        """Absorb pre-populated per-host streaming stores via the
+        column-level window merge (exact aggregate recompute + sketch
+        re-anchor per stage).  Returns rows ingested.
+
+        Recovery caveat: stores carry no ``(boot, seq)`` provenance, so
+        this does NOT seed the delta dedup watermarks — a launcher
+        restoring from recovered stores should also restore its previous
+        ``host_seq`` mapping (a plain dict, safe to persist), otherwise
+        hosts redelivering their last un-acked deltas will re-ingest rows
+        already present in the recovered windows."""
+        rows = self.store.merge(*stores)
+        self.rows_ingested += rows
+        self._prune_stages()
+        return rows
+
+    # -- diagnosis ---------------------------------------------------------
+    def step(self) -> list:
+        """One fleet-wide diagnosis tick over every merged stage window
+        (single batched gate evaluation via ``analyze_fleet``).  Returns
+        the newly confirmed :class:`~repro.core.analyzer.RootCause`\\ s
+        (the stream's emit-once/decay dedup applies)."""
+        return self.stream.step()
+
+    @property
+    def last_analysis(self):
+        return self.stream.last_analysis
+
+    @property
+    def num_hosts(self) -> int:
+        return len(self.host_seq)
+
+    @property
+    def num_live_rows(self) -> int:
+        return self.store.num_tasks
+
+    # -- retention ---------------------------------------------------------
+    def _prune_stages(self) -> None:
+        if self.max_stages is None:
+            return
+        excess = len(self.store.stage_ids()) - self.max_stages
+        if excess > 0:
+            for stage_id in self.store.stage_ids()[:excess]:
+                self.store.drop_stage(stage_id)
+                self.stages_dropped += 1
+                self._pruned[stage_id] = None
+            # Bound the tombstone set: ids older than several retention
+            # generations cannot plausibly recur on a live fleet.
+            cap = 8 * self.max_stages
+            while len(self._pruned) > cap:
+                del self._pruned[next(iter(self._pruned))]

@@ -4,13 +4,15 @@ This is the data-acquisition substrate under BigRoots: the Spark-log +
 mpstat/iostat/sar layer of the paper, re-homed onto an SPMD training host
 (DESIGN.md §2 mapping table).
 """
-from .events import GcTimer, StepTelemetry
+from .events import GcTimer, StageDelta, StepDelta, StepTelemetry
 from .sampler import SystemSampler, read_cpu_sample, read_disk_sample, read_net_sample
 from .timeline import ResourceTimeline, TimelineCursor
 
 __all__ = [
     "GcTimer",
     "ResourceTimeline",
+    "StageDelta",
+    "StepDelta",
     "StepTelemetry",
     "TimelineCursor",
     "SystemSampler",

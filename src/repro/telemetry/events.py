@@ -7,18 +7,39 @@ compute-until-barrier, d2h, checkpoint), accumulates byte counters and GC
 pauses, and emits a TaskRecord whose stage is the step window.  The
 *pre-barrier duration* (host-local work) is the task duration — the honest
 analog of a Spark task's runtime under a synchronous collective.
+
+Fleet wire format
+-----------------
+Cross-node comparison is the whole BigRoots premise, so per-host telemetry
+must reach a central aggregator.  :class:`StepDelta` is the unit shipped:
+the columnar block of rows a host emitted since its last drain, grouped by
+stage, serialized by :meth:`StepDelta.to_bytes` as one small JSON header
+(strings: host, stage ids, task ids, node names, column names) followed by
+raw little-endian numeric buffers — no pickling, no per-row framing, and a
+decode that is a handful of ``np.frombuffer`` views.  A per-column
+``present`` mask rides along so "recorded as 0.0" and "absent" stay
+distinct across the wire (the same invariant the columnar substrate keeps
+in memory).  ``StepTelemetry(wire=True)`` accumulates pending rows and
+:meth:`StepTelemetry.drain_delta` cuts a delta; the launcher-side consumer
+is :class:`repro.serve.FleetAggregator`.
 """
 from __future__ import annotations
 
 import gc
+import json
+import struct
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from ..core.features import JAX_FEATURES, FeatureSchema
 from ..core.frame import TraceStore
-from ..core.window import SlidingStageWindow
+from ..core.window import SlidingStageWindow, StreamingTraceStore
 from .timeline import ResourceTimeline
+
+_WIRE_MAGIC = b"BRD1"
 
 
 class GcTimer:
@@ -59,6 +80,134 @@ class GcTimer:
 
     def __exit__(self, *exc) -> None:
         self.uninstall()
+
+
+@dataclass
+class StageDelta:
+    """One stage's slice of a :class:`StepDelta`: parallel columns for the
+    rows a host added to that stage since the last drain."""
+
+    stage_id: str
+    task_ids: list[str]
+    nodes: list[str]
+    starts: np.ndarray          # float64 [m]
+    ends: np.ndarray            # float64 [m]
+    locality: np.ndarray        # int16   [m]
+    columns: dict[str, np.ndarray]   # float64 [m] per feature name
+    present: dict[str, np.ndarray]   # bool    [m] per feature name
+
+    def __len__(self) -> int:
+        return len(self.task_ids)
+
+
+@dataclass
+class StepDelta:
+    """A host's telemetry rows since its last drain, as columnar blocks per
+    stage — the unit a sharded fleet ships to the launcher-side
+    :class:`~repro.serve.FleetAggregator` (see module docstring for the
+    wire layout).
+
+    ``seq`` increases by one per drain within a producer incarnation;
+    ``boot`` identifies the incarnation itself (a nanosecond timestamp
+    taken when the :class:`StepTelemetry` was created).  Together they let
+    the consumer tell a *redelivered* delta (same boot, seq not newer →
+    drop) from a *restarted host* (newer boot → accept and reset) without
+    any handshake."""
+
+    host: str
+    seq: int
+    stages: list[StageDelta]
+    boot: int = 0
+
+    @property
+    def num_rows(self) -> int:
+        return sum(len(s) for s in self.stages)
+
+    def apply_to(self, store: StreamingTraceStore) -> int:
+        """Ingest every stage block into ``store`` (columnar bulk path,
+        present masks preserved).  Returns rows ingested (late rows behind
+        a window's watermark are dropped by the window, as ever)."""
+        ingested = 0
+        for s in self.stages:
+            ingested += store.add_rows(
+                s.stage_id, s.task_ids, s.nodes, s.starts, s.ends,
+                s.locality, feature_columns=s.columns,
+                present_columns=s.present,
+            )
+        return ingested
+
+    # -- wire format -------------------------------------------------------
+    def to_bytes(self) -> bytes:
+        """Serialize: magic, u32 header length, JSON header (strings only),
+        then per stage the raw ``<f8/<i2/u8`` column buffers in header
+        order.  Column values where ``present`` is False are encoded as
+        0.0 (the decoder re-imposes the mask)."""
+        header = {
+            "host": self.host,
+            "seq": self.seq,
+            "boot": self.boot,
+            "stages": [
+                {
+                    "stage_id": s.stage_id,
+                    "n": len(s),
+                    "task_ids": s.task_ids,
+                    "nodes": s.nodes,
+                    "columns": list(s.columns),
+                }
+                for s in self.stages
+            ],
+        }
+        head = json.dumps(header, separators=(",", ":")).encode()
+        parts = [_WIRE_MAGIC, struct.pack("<I", len(head)), head]
+        for s in self.stages:
+            parts.append(np.ascontiguousarray(s.starts, dtype="<f8").tobytes())
+            parts.append(np.ascontiguousarray(s.ends, dtype="<f8").tobytes())
+            parts.append(np.ascontiguousarray(s.locality, dtype="<i2").tobytes())
+            for name in s.columns:
+                vals = np.asarray(s.columns[name], dtype="<f8")
+                mask = s.present.get(name)
+                if mask is not None:
+                    # Canonical payload: masked-out slots really are 0.0 on
+                    # the wire, whatever the producer left in the buffer.
+                    vals = np.where(np.asarray(mask, dtype=bool), vals, 0.0)
+                parts.append(np.ascontiguousarray(vals, dtype="<f8").tobytes())
+                parts.append(
+                    np.ascontiguousarray(
+                        s.present.get(name, np.ones(len(s), dtype=bool)),
+                        dtype="u1",
+                    ).tobytes()
+                )
+        return b"".join(parts)
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "StepDelta":
+        if buf[:4] != _WIRE_MAGIC:
+            raise ValueError("not a StepDelta wire buffer (bad magic)")
+        (hlen,) = struct.unpack_from("<I", buf, 4)
+        header = json.loads(buf[8 : 8 + hlen].decode())
+        off = 8 + hlen
+        stages: list[StageDelta] = []
+        for sh in header["stages"]:
+            n = int(sh["n"])
+            def take(dtype, count):
+                nonlocal off
+                arr = np.frombuffer(buf, dtype=dtype, count=count, offset=off)
+                off += arr.nbytes
+                return arr
+            starts = take("<f8", n).astype(np.float64)
+            ends = take("<f8", n).astype(np.float64)
+            locality = take("<i2", n).astype(np.int16)
+            columns: dict[str, np.ndarray] = {}
+            present: dict[str, np.ndarray] = {}
+            for name in sh["columns"]:
+                columns[name] = take("<f8", n).astype(np.float64)
+                present[name] = take("u1", n).astype(bool)
+            stages.append(StageDelta(
+                sh["stage_id"], list(sh["task_ids"]), list(sh["nodes"]),
+                starts, ends, locality, columns, present,
+            ))
+        return cls(header["host"], int(header["seq"]), stages,
+                   boot=int(header.get("boot", 0)))
 
 
 @dataclass
@@ -121,6 +270,13 @@ class StepTelemetry:
         with telem.step(i) as s: ...
         for cause in stream.step():  # newly confirmed causes, live
             ...
+
+    Wire mode (``wire=True``) buffers each emitted row until
+    :meth:`drain_delta` cuts a columnar :class:`StepDelta` — the export
+    surface a sharded fleet ships to the launcher's
+    :class:`~repro.serve.FleetAggregator` for merged, fleet-wide diagnosis
+    (``delta.to_bytes()`` / ``StepDelta.from_bytes`` for cross-process
+    transport; pass the object directly in-process).
     """
 
     # phase name → TIME feature name in the JAX schema
@@ -144,6 +300,8 @@ class StepTelemetry:
         stream_max_rows: int | None = None,
         stream_span: float | None = None,
         stream_quantile: float = 0.9,
+        wire: bool = False,
+        wire_pending_cap: int = 65536,
     ) -> None:
         self.node = node
         self.timeline = timeline
@@ -161,6 +319,22 @@ class StepTelemetry:
                           else self.window),
                 quantile=stream_quantile,
             )
+        # Wire mode: additionally buffer each emitted row until the next
+        # drain_delta() — the sharded-fleet export surface.  ``boot``
+        # stamps this producer incarnation so a consumer can tell a
+        # restarted host (new boot) from a redelivered delta (same boot).
+        # The buffer is bounded (``wire_pending_cap`` rows): if nobody
+        # drains — a stalled launcher, or wire=True wired up without a
+        # consumer — the oldest rows are dropped (``wire_overflow_drops``)
+        # with a one-time warning instead of leaking an always-on loop's
+        # memory.
+        self.wire = wire
+        self.wire_pending_cap = max(int(wire_pending_cap), 1)
+        self.wire_overflow_drops = 0
+        self.boot = time.time_ns()
+        self._pending: dict[str, list[tuple]] = {}
+        self._delta_seq = 0
+        self._overflow_warned = False
 
     def stage_id_for(self, step: int) -> str:
         """Stage = window of `window` consecutive steps (peer pooling)."""
@@ -210,10 +384,82 @@ class StepTelemetry:
                 scope.locality, features,
             )
             self.live_window.advance(scope.end)
+        if self.wire:
+            stage_id = self.stage_id_for(scope.step)
+            self._pending.setdefault(stage_id, []).append(
+                (task_id, self.node, scope.start, scope.end,
+                 scope.locality, features)
+            )
+            if self.pending_rows > self.wire_pending_cap:
+                # Nobody is draining: shed the oldest row (stages are
+                # created in step order, so the first stage's head is the
+                # oldest) and say so once.
+                first = next(iter(self._pending))
+                rows = self._pending[first]
+                rows.pop(0)
+                if not rows:
+                    del self._pending[first]
+                self.wire_overflow_drops += 1
+                if not self._overflow_warned:
+                    self._overflow_warned = True
+                    import warnings
+
+                    warnings.warn(
+                        f"StepTelemetry({self.node!r}) wire buffer exceeded "
+                        f"{self.wire_pending_cap} rows with no drain_delta() "
+                        "consumer; dropping oldest rows",
+                        RuntimeWarning,
+                        stacklevel=3,
+                    )
+
+    # -- wire export (sharded fleet → launcher) -----------------------------
+    @property
+    def pending_rows(self) -> int:
+        return sum(len(rows) for rows in self._pending.values())
+
+    def drain_delta(self) -> StepDelta:
+        """Cut a :class:`StepDelta` from the rows emitted since the last
+        drain (requires ``wire=True``) and clear the buffer.  Feature dicts
+        are columnarized per stage over the union of names seen in the
+        batch, with a ``present`` mask so sparse rows round-trip exactly.
+        An empty delta (no steps since last drain) is legal and cheap."""
+        if not self.wire:
+            raise RuntimeError("StepTelemetry(wire=True) required to drain deltas")
+        stages: list[StageDelta] = []
+        for stage_id, rows in self._pending.items():
+            m = len(rows)
+            names = sorted({nm for *_ , feats in rows for nm in feats})
+            columns = {nm: np.zeros(m, dtype=np.float64) for nm in names}
+            present = {nm: np.zeros(m, dtype=bool) for nm in names}
+            starts = np.empty(m, dtype=np.float64)
+            ends = np.empty(m, dtype=np.float64)
+            locality = np.zeros(m, dtype=np.int16)
+            task_ids: list[str] = []
+            nodes: list[str] = []
+            for i, (tid, node, t0, t1, loc, feats) in enumerate(rows):
+                task_ids.append(tid)
+                nodes.append(node)
+                starts[i], ends[i], locality[i] = t0, t1, loc
+                for nm, val in feats.items():
+                    columns[nm][i] = float(val)
+                    present[nm][i] = True
+            stages.append(StageDelta(stage_id, task_ids, nodes, starts, ends,
+                                     locality, columns, present))
+        self._pending = {}
+        self._delta_seq += 1
+        return StepDelta(self.node, self._delta_seq, stages, boot=self.boot)
 
     # -- merging (multi-host traces are concatenated by the launcher) -----------
     def merge_into(self, trace) -> None:
-        """Append this host's records into ``trace`` (Trace or TraceStore)."""
+        """Append this host's records into ``trace``.
+
+        A :class:`~repro.core.frame.TraceStore` target takes the columnar
+        merge path (per-stage block concatenation — no TaskRecord
+        materialization); anything else falls back to the dataclass loop.
+        """
+        if isinstance(trace, TraceStore):
+            trace.merge(self.trace)
+            return
         for stage in self.trace.stages():
             for task in stage.tasks:
                 trace.add_task(task)

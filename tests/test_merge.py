@@ -1,0 +1,767 @@
+"""Multi-host merge substrate: window/store merges, the StepDelta wire
+format, and the launcher-side FleetAggregator.
+
+The load-bearing property (ISSUE 4 acceptance): analyzing a *merged*
+``TraceStore``/``SlidingStageWindow`` is byte-identical to analyzing the
+union of surviving rows ingested into a single store — in exact-quantile
+mode the full ``RootCause`` objects (values included) must match
+bit-for-bit, and the merged window's running aggregates must equal the
+union window's exactly (merge ends in an exact recompute, so both sides
+reduce the same rows in the same order).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BigRootsAnalyzer,
+    BigRootsThresholds,
+    JAX_FEATURES,
+    RootCauseStream,
+    SPARK_FEATURES,
+    SlidingStageWindow,
+    StageAnalysis,
+    StreamingTraceStore,
+    TaskRecord,
+    TraceStore,
+    found_set,
+)
+from repro.core.features import FeatureKind, FeatureSchema, FeatureSpec
+from repro.serve.fleet import FleetAggregator
+from repro.telemetry import ResourceTimeline
+from repro.telemetry.events import StageDelta, StepDelta, StepTelemetry
+
+FEATS = ("cpu", "disk", "network", "read_bytes", "shuffle_read_bytes",
+         "jvm_gc_time")
+
+
+def random_host_rows(rng, host: str, n: int, n_nodes: int = 3,
+                     t0: float = 0.0) -> dict:
+    """One host's task rows as columns (node names are host-scoped by
+    default; callers rewrite them for collision scenarios)."""
+    starts = t0 + rng.uniform(0.0, 30.0, n)
+    durs = rng.uniform(0.5, 60.0, n)
+    cols = {
+        "task_ids": [f"{host}/t{i}" for i in range(n)],
+        "nodes": [f"{host}-n{int(rng.integers(n_nodes))}" for _ in range(n)],
+        "starts": starts,
+        "ends": starts + durs,
+        "locality": rng.choice([0, 0, 0, 1, 2], n).astype(np.int16),
+        "features": {
+            "cpu": rng.uniform(0, 1, n),
+            "disk": rng.uniform(0, 1, n),
+            "network": rng.uniform(0, 1e8, n),
+            "read_bytes": rng.uniform(0, 1e9, n),
+            "shuffle_read_bytes": rng.uniform(0, 1e9, n),
+            "jvm_gc_time": rng.uniform(0, 1, n) * durs,
+        },
+    }
+    return cols
+
+
+def ingest_host_window(rng, cols: dict, quantile: float,
+                       **window_kw) -> SlidingStageWindow:
+    """Stream one host's columns into a window via a random mix of
+    per-row adds and bulk batches (exercises both ingest paths and the
+    sketch-lag machinery before the merge under test)."""
+    w = SlidingStageWindow("s", SPARK_FEATURES, quantile=quantile, **window_kw)
+    n = len(cols["task_ids"])
+    i = 0
+    while i < n:
+        if rng.random() < 0.5:
+            w.add_row(cols["task_ids"][i], cols["nodes"][i],
+                      float(cols["starts"][i]), float(cols["ends"][i]),
+                      int(cols["locality"][i]),
+                      {k: float(v[i]) for k, v in cols["features"].items()})
+            i += 1
+        else:
+            j = min(n, i + int(rng.integers(1, 20)))
+            sl = slice(i, j)
+            w.add_rows(cols["task_ids"][sl], cols["nodes"][sl],
+                       cols["starts"][sl], cols["ends"][sl],
+                       cols["locality"][sl],
+                       {k: v[sl] for k, v in cols["features"].items()})
+            i = j
+    return w
+
+
+def union_window(windows, quantile: float, **window_kw) -> SlidingStageWindow:
+    """The reference: one window ingesting every surviving live row of
+    ``windows`` in merge order, in a single bulk call (a single-batch
+    ingest reduces the rows exactly like the merge's final recompute)."""
+    frames = [w.seal() for w in windows]
+    u = SlidingStageWindow("s", SPARK_FEATURES, quantile=quantile, **window_kw)
+    task_ids, nodes = [], []
+    for f in frames:
+        task_ids.extend(f.task_ids)
+        nodes.extend(f.node_names[f.node_codes].tolist())
+    if not task_ids:
+        return u
+    col = SPARK_FEATURES.col_index
+    raw = np.concatenate([f.raw for f in frames], axis=0)
+    present = np.concatenate([f.present for f in frames], axis=0)
+    u.add_rows(
+        task_ids, nodes,
+        np.concatenate([f.starts for f in frames]),
+        np.concatenate([f.ends for f in frames]),
+        np.concatenate([f.locality for f in frames]),
+        feature_columns={nm: raw[:, j] for nm, j in col.items()
+                         if nm != "locality"},
+        present_columns={nm: present[:, j] for nm, j in col.items()
+                         if nm != "locality"},
+    )
+    return u
+
+
+def random_timeline(rng, nodes, t_hi: float) -> ResourceTimeline:
+    tl = ResourceTimeline()
+    for node in nodes:
+        for metric in ("cpu", "disk", "network"):
+            if rng.random() < 0.2:
+                continue
+            ts = np.arange(-10.0, t_hi, float(rng.uniform(0.7, 2.0)))
+            keep = rng.random(ts.size) > 0.3
+            samples = [(float(t), float(rng.uniform(0, 1))) for t in ts[keep]]
+            tl.record_many(node, metric, samples)
+    return tl
+
+
+def random_thresholds(rng) -> BigRootsThresholds:
+    return BigRootsThresholds(
+        quantile=float(rng.choice([0.5, 0.7, 0.8, 0.9, 0.95])),
+        peer_mean=float(rng.choice([1.0, 1.25, 1.5, 2.0])),
+        edge_filter=float(rng.choice([0.3, 0.5, 0.8])),
+        edge_width=float(rng.choice([1.0, 3.0, 5.0])),
+    )
+
+
+class TestWindowMergeEquivalence:
+    def test_merged_equals_union_byte_identical_exact_mode(self):
+        """Merged-window analysis ≡ union-ingest analysis: full RootCause
+        objects (values, peer groups, nodes) and running aggregates match
+        bit-for-bit in exact-quantile mode."""
+        for seed in range(30):
+            rng = np.random.default_rng(seed)
+            th = random_thresholds(rng)
+            n_hosts = int(rng.integers(2, 6))
+            hosts_cols = [
+                random_host_rows(rng, f"h{h}", int(rng.integers(1, 40)))
+                for h in range(n_hosts)
+            ]
+            windows = [ingest_host_window(rng, c, th.quantile)
+                       for c in hosts_cols]
+            all_nodes = {nd for c in hosts_cols for nd in c["nodes"]}
+            t_hi = max(float(c["ends"].max()) for c in hosts_cols) + 10.0
+            tl = random_timeline(rng, all_nodes, t_hi)
+            an = BigRootsAnalyzer(SPARK_FEATURES, th, timelines=tl,
+                                  window_exact_quantiles=True)
+
+            merged = SlidingStageWindow("s", SPARK_FEATURES,
+                                        quantile=th.quantile)
+            ingested = merged.merge(*windows)
+            union = union_window(windows, th.quantile)
+
+            assert ingested == union.live_count == merged.live_count
+            np.testing.assert_array_equal(merged.vsum, union.vsum)
+            np.testing.assert_array_equal(merged.vsumsq, union.vsumsq)
+            np.testing.assert_array_equal(merged.live_v(), union.live_v())
+
+            sa_m = an.analyze_stage(merged)
+            sa_u = an.analyze_stage(union)
+            assert sa_m.straggler_ids == sa_u.straggler_ids, f"seed={seed}"
+            key = lambda c: (c.task_id, c.feature)
+            assert sorted(sa_m.root_causes, key=key) == \
+                sorted(sa_u.root_causes, key=key), f"seed={seed}"
+
+    def test_merge_into_populated_target_equals_union(self):
+        """Merging into a non-empty window unions behind its own rows."""
+        for seed in range(10):
+            rng = np.random.default_rng(100 + seed)
+            th = random_thresholds(rng)
+            cols_t = random_host_rows(rng, "tgt", int(rng.integers(5, 30)))
+            cols_o = random_host_rows(rng, "oth", int(rng.integers(5, 30)))
+            target = ingest_host_window(rng, cols_t, th.quantile)
+            other = ingest_host_window(rng, cols_o, th.quantile)
+            union = union_window([target, other], th.quantile)
+            target.merge(other)
+            an = BigRootsAnalyzer(SPARK_FEATURES, th,
+                                  window_exact_quantiles=True)
+            np.testing.assert_array_equal(target.vsum, union.vsum)
+            assert found_set(an.analyze_stage(target).root_causes) == \
+                found_set(an.analyze_stage(union).root_causes), f"seed={seed}"
+
+    def test_sketch_mode_differs_only_on_quantile_borderline(self):
+        """Default (sketch λq) mode after a merge: the re-anchor is exact,
+        so any disagreement with the exact-mode analysis can only sit on
+        rows whose gate value is within sketch tolerance of the exact
+        quantile."""
+        for seed in range(15):
+            rng = np.random.default_rng(200 + seed)
+            th = random_thresholds(rng)
+            windows = [
+                ingest_host_window(
+                    rng, random_host_rows(rng, f"h{h}", 30), th.quantile)
+                for h in range(3)
+            ]
+            merged = SlidingStageWindow("s", SPARK_FEATURES,
+                                        quantile=th.quantile)
+            merged.merge(*windows)
+            got = found_set(BigRootsAnalyzer(SPARK_FEATURES, th)
+                            .analyze_stage(merged).root_causes)
+            want = found_set(
+                BigRootsAnalyzer(SPARK_FEATURES, th,
+                                 window_exact_quantiles=True)
+                .analyze_stage(merged).root_causes)
+            # Post-merge the sketch is anchored at the exact quantiles, so
+            # the two modes must agree outright.
+            assert got == want, f"seed={seed}"
+
+
+class TestWindowMergeCorners:
+    def _empty(self, q=0.9, **kw):
+        return SlidingStageWindow("s", SPARK_FEATURES, quantile=q, **kw)
+
+    def test_empty_merges(self):
+        rng = np.random.default_rng(0)
+        populated = ingest_host_window(
+            rng, random_host_rows(rng, "h0", 12), 0.9)
+        # empty <- empty
+        e1, e2 = self._empty(), self._empty()
+        assert e1.merge(e2) == 0 and e1.live_count == 0
+        # empty <- populated
+        tgt = self._empty()
+        assert tgt.merge(populated) == 12 and tgt.live_count == 12
+        # populated <- empty: a no-op that must not disturb aggregates.
+        before = populated.vsum.copy()
+        compactions = populated.compactions
+        assert populated.merge(self._empty()) == 0
+        np.testing.assert_array_equal(populated.vsum, before)
+        assert populated.compactions == compactions
+
+    def test_disjoint_and_colliding_vocabularies(self):
+        rng = np.random.default_rng(1)
+        a = ingest_host_window(rng, random_host_rows(rng, "a", 10), 0.9)
+        b_cols = random_host_rows(rng, "b", 10)
+        b = ingest_host_window(rng, b_cols, 0.9)
+        # Disjoint: merged vocabulary is the union.
+        m = self._empty()
+        m.merge(a, b)
+        merged_nodes = {m.node_name(int(c)) for c in
+                        m.node_codes[m.live_index()]}
+        want_nodes = ({a.node_name(int(c)) for c in a.node_codes[a.live_index()]}
+                      | {b.node_name(int(c)) for c in b.node_codes[b.live_index()]})
+        assert merged_nodes == want_nodes
+        # Colliding: same names on both sides share codes; counts sum.
+        c_cols = dict(b_cols)
+        c_cols["task_ids"] = [f"c/t{i}" for i in range(10)]
+        c = ingest_host_window(rng, c_cols, 0.9)  # same node names as b
+        m2 = self._empty()
+        m2.merge(b, c)
+        for name in {nd for nd in c_cols["nodes"]}:
+            code = m2._node_index[name]
+            want = (sum(1 for nd in b_cols["nodes"] if nd == name)
+                    + sum(1 for nd in c_cols["nodes"] if nd == name))
+            assert m2.node_counts[code] == want
+
+    def test_merge_after_epoch_compaction(self):
+        """Sources that retired/compacted contribute exactly their
+        surviving live rows."""
+        rng = np.random.default_rng(2)
+        cols = random_host_rows(rng, "h0", 60)
+        # A tight max_rows forces retirement + compaction cycles.
+        w = ingest_host_window(rng, cols, 0.9, max_rows=20)
+        assert w.retired_total > 0
+        fresh = self._empty()
+        fresh.merge(w)
+        union = union_window([w], 0.9)
+        np.testing.assert_array_equal(fresh.vsum, union.vsum)
+        an = BigRootsAnalyzer(SPARK_FEATURES, window_exact_quantiles=True)
+        assert found_set(an.analyze_stage(fresh).root_causes) == \
+            found_set(an.analyze_stage(union).root_causes)
+
+    def test_watermark_reconciliation_both_directions(self):
+        rng = np.random.default_rng(3)
+        lo = self._empty(span=1000.0)
+        hi = self._empty(span=1000.0)
+        for i in range(5):
+            lo.add_row(f"lo{i}", "n0", 0.0, 10.0 + i)
+        for i in range(5):
+            hi.add_row(f"hi{i}", "n1", 0.0, 2000.0 + i)
+        hi.advance(3000.0)          # hi watermark = 2000 > every lo row
+        assert hi.watermark == 2000.0
+        assert hi.live_count == 4   # hi0 (end 2000.0) retired by advance
+        # Target watermark wins over older source rows: all refused late.
+        tgt_hi = self._empty(span=1000.0)
+        tgt_hi.add_row("t0", "n2", 0.0, 2500.0)
+        tgt_hi.advance(3000.0)
+        assert tgt_hi.merge(lo) == 0
+        assert tgt_hi.late_drops == 5 and tgt_hi.live_count == 1
+        # Source watermark wins over older target rows: they retire.
+        tgt_lo = self._empty()
+        for i in range(4):
+            tgt_lo.add_row(f"t{i}", "n3", 0.0, 15.0 + i)
+        assert tgt_lo.merge(hi) == 4
+        assert tgt_lo.watermark == 2000.0
+        assert tgt_lo.live_count == 4 and tgt_lo.retired_total == 4
+
+    def test_max_rows_enforced_after_merge(self):
+        rng = np.random.default_rng(4)
+        a = ingest_host_window(rng, random_host_rows(rng, "a", 30), 0.9)
+        tgt = self._empty(max_rows=25)
+        tgt.merge(a)
+        assert tgt.live_count <= 25
+        assert tgt.watermark > -np.inf  # cap-implied watermark moved
+
+    def test_self_merge_and_schema_mismatch_raise(self):
+        w = self._empty()
+        with pytest.raises(ValueError):
+            w.merge(w)
+        other = SlidingStageWindow("s", JAX_FEATURES)
+        with pytest.raises(ValueError):
+            w.merge(other)
+
+    def test_repeated_source_raises(self):
+        """The same source listed twice would silently double-ingest its
+        rows (corrupting n, Σv, and every peer mean) — refuse it."""
+        rng = np.random.default_rng(12)
+        b = ingest_host_window(rng, random_host_rows(rng, "b", 4), 0.9)
+        with pytest.raises(ValueError, match="twice"):
+            self._empty().merge(b, b)
+        sb = StreamingTraceStore(SPARK_FEATURES)
+        sb.add_row("t", "s0", "n", 0.0, 1.0)
+        with pytest.raises(ValueError, match="twice"):
+            StreamingTraceStore(SPARK_FEATURES).merge(sb, sb)
+        tb = TraceStore(SPARK_FEATURES)
+        tb.add_row("t", "s0", "n", 0.0, 1.0)
+        with pytest.raises(ValueError, match="twice"):
+            TraceStore(SPARK_FEATURES).merge(tb, tb)
+
+    def test_post_merge_sketch_is_exactly_anchored(self):
+        """The drift bound at its tightest: immediately after a merge the
+        P² sketch answers the exact quantiles bit-for-bit (re-anchored
+        from merged live rows), and further ingest re-anchors again once
+        the lag budget is spent."""
+        rng = np.random.default_rng(5)
+        windows = [
+            ingest_host_window(rng, random_host_rows(rng, f"h{h}", 25), 0.9)
+            for h in range(3)
+        ]
+        m = self._empty()
+        m.merge(*windows)
+        np.testing.assert_array_equal(m.quantiles(), m.quantiles(exact=True))
+        # Bulk ingest leaves the sketch lagging (below the lag budget the
+        # estimate may drift from exact) — but the next merge re-anchors
+        # exactly again: every merge ends in an exact sketch rebuild.
+        cols = random_host_rows(rng, "hx", 80)
+        m.add_rows(cols["task_ids"], cols["nodes"], cols["starts"],
+                   cols["ends"], cols["locality"], cols["features"])
+        late = ingest_host_window(rng, random_host_rows(rng, "hy", 10), 0.9)
+        m.merge(late)
+        np.testing.assert_array_equal(m.quantiles(), m.quantiles(exact=True))
+
+
+class TestStreamingStoreMerge:
+    def test_per_stage_union_and_window_creation(self):
+        rng = np.random.default_rng(6)
+        a = StreamingTraceStore(SPARK_FEATURES)
+        b = StreamingTraceStore(SPARK_FEATURES)
+        ca = random_host_rows(rng, "a", 8)
+        cb = random_host_rows(rng, "b", 8)
+        a.add_rows("s0", ca["task_ids"], ca["nodes"], ca["starts"],
+                   ca["ends"], ca["locality"], ca["features"])
+        b.add_rows("s1", cb["task_ids"], cb["nodes"], cb["starts"],
+                   cb["ends"], cb["locality"], cb["features"])
+        tgt = StreamingTraceStore(SPARK_FEATURES)
+        assert tgt.merge(a, b) == 16
+        assert sorted(tgt.stage_ids()) == ["s0", "s1"]
+        assert tgt.num_tasks == 16
+        with pytest.raises(ValueError):
+            tgt.merge(tgt)
+
+    def test_drop_stage(self):
+        s = StreamingTraceStore(SPARK_FEATURES)
+        s.add_row("t", "s0", "n", 0.0, 1.0)
+        assert s.drop_stage("s0") and not s.drop_stage("s0")
+        assert s.stage_ids() == []
+
+
+class TestTraceStoreMerge:
+    def _store_from(self, cols, stage_id="s0"):
+        s = TraceStore(SPARK_FEATURES)
+        for i in range(len(cols["task_ids"])):
+            s.add_row(cols["task_ids"][i], stage_id, cols["nodes"][i],
+                      float(cols["starts"][i]), float(cols["ends"][i]),
+                      int(cols["locality"][i]),
+                      {k: float(v[i]) for k, v in cols["features"].items()})
+        return s
+
+    def test_merged_equals_union_ingest(self):
+        for seed in range(10):
+            rng = np.random.default_rng(300 + seed)
+            hosts = [random_host_rows(rng, f"h{h}", int(rng.integers(2, 25)))
+                     for h in range(3)]
+            stores = [self._store_from(c, f"s{h % 2}")
+                      for h, c in enumerate(hosts)]
+            merged = TraceStore(SPARK_FEATURES)
+            merged.merge(*stores)
+            union = TraceStore(SPARK_FEATURES)
+            for s in stores:
+                for frame in s.stages():
+                    union.extend(frame.tasks)
+            assert merged.num_tasks == union.num_tasks
+            for sid in union.stage_ids():
+                assert merged.stage(sid).tasks == union.stage(sid).tasks
+            an = BigRootsAnalyzer(SPARK_FEATURES)
+            assert found_set(an.root_causes(merged)) == \
+                found_set(an.root_causes(union)), f"seed={seed}"
+
+    def test_empty_and_new_stage_merge(self):
+        rng = np.random.default_rng(7)
+        empty = TraceStore(SPARK_FEATURES)
+        full = self._store_from(random_host_rows(rng, "h", 5), "sX")
+        tgt = TraceStore(SPARK_FEATURES)
+        tgt.merge(empty, full)
+        assert tgt.stage_ids() == ["sX"] and tgt.num_tasks == 5
+        with pytest.raises(ValueError):
+            tgt.merge(tgt)
+
+    def test_extras_survive_columnar_merge(self):
+        src = TraceStore(SPARK_FEATURES)
+        src.add_row("t0", "s0", "n0", 0.0, 1.0,
+                    features={"cpu": 0.5, "weird_counter": 7.0})
+        tgt = TraceStore(SPARK_FEATURES)
+        tgt.add_row("u0", "s0", "n1", 0.0, 2.0, features={"cpu": 0.1})
+        tgt.merge(src)
+        tasks = tgt.stage("s0").tasks
+        assert tasks[1].features["weird_counter"] == 7.0
+
+    def test_foreign_schema_falls_back_to_task_view(self):
+        tiny = FeatureSchema([FeatureSpec("cpu", FeatureKind.RESOURCE)])
+        src = TraceStore(tiny)
+        src.add_row("t0", "s0", "n0", 0.0, 1.0, features={"cpu": 0.9})
+        tgt = TraceStore(SPARK_FEATURES)
+        tgt.merge(src)
+        assert tgt.num_tasks == 1
+        assert tgt.stage("s0").tasks[0].features == {"cpu": 0.9}
+
+
+class TestWireFormat:
+    def _delta(self, rng, host="h0", seq=1, stages=2, rows=6):
+        out = []
+        for si in range(stages):
+            cols = random_host_rows(rng, f"{host}-s{si}", rows)
+            present = {k: rng.random(rows) < 0.8 for k in cols["features"]}
+            out.append(StageDelta(
+                f"stage{si}", cols["task_ids"], cols["nodes"],
+                cols["starts"], cols["ends"], cols["locality"],
+                {k: np.where(present[k], v, 0.0)
+                 for k, v in cols["features"].items()},
+                present,
+            ))
+        return StepDelta(host, seq, out)
+
+    def test_round_trip_bytes(self):
+        rng = np.random.default_rng(8)
+        d = self._delta(rng)
+        rt = StepDelta.from_bytes(d.to_bytes())
+        assert rt.host == d.host and rt.seq == d.seq
+        assert rt.num_rows == d.num_rows
+        for a, b in zip(rt.stages, d.stages):
+            assert a.stage_id == b.stage_id
+            assert a.task_ids == b.task_ids and a.nodes == b.nodes
+            np.testing.assert_array_equal(a.starts, b.starts)
+            np.testing.assert_array_equal(a.ends, b.ends)
+            np.testing.assert_array_equal(a.locality, b.locality)
+            assert set(a.columns) == set(b.columns)
+            for nm in b.columns:
+                np.testing.assert_array_equal(a.columns[nm], b.columns[nm])
+                np.testing.assert_array_equal(a.present[nm], b.present[nm])
+
+    def test_masked_values_zeroed_on_wire(self):
+        """The documented canonical encoding: whatever the producer left in
+        a masked-out slot, the wire carries 0.0 there."""
+        sd = StageDelta(
+            "s0", ["t0", "t1"], ["n0", "n1"],
+            np.array([0.0, 0.0]), np.array([1.0, 2.0]),
+            np.zeros(2, np.int16),
+            {"cpu": np.array([0.7, 99.9])},          # garbage under mask
+            {"cpu": np.array([True, False])},
+        )
+        rt = StepDelta.from_bytes(StepDelta("h", 1, [sd]).to_bytes())
+        np.testing.assert_array_equal(rt.stages[0].columns["cpu"],
+                                      [0.7, 0.0])
+        np.testing.assert_array_equal(rt.stages[0].present["cpu"],
+                                      [True, False])
+
+    def test_empty_delta_and_bad_magic(self):
+        d = StepDelta("h0", 3, [])
+        rt = StepDelta.from_bytes(d.to_bytes())
+        assert rt.num_rows == 0 and rt.seq == 3
+        with pytest.raises(ValueError):
+            StepDelta.from_bytes(b"NOPE" + d.to_bytes()[4:])
+
+    def test_present_mask_round_trips_through_store(self):
+        """Absent-vs-recorded-0.0 survives wire + ingest: sealed rows only
+        carry the features their source dict actually had."""
+        rng = np.random.default_rng(9)
+        d = self._delta(rng, stages=1, rows=4)
+        store = StreamingTraceStore(SPARK_FEATURES)
+        assert d.apply_to(store) == 4
+        frame = store.window("stage0").seal()
+        sd = d.stages[0]
+        names = [nm for nm in sd.columns if nm in SPARK_FEATURES.col_index]
+        for i in range(4):
+            feats = frame.task(i).features
+            for nm in names:
+                assert (nm in feats) == bool(sd.present[nm][i])
+
+    def test_locality_named_counter_survives_wire_path(self):
+        """A telemetry counter named 'locality' shadows the owned task
+        field; the dict paths route it to extras, and the bulk wire path
+        (drain_delta → apply_to → add_rows) must do the same — not die."""
+        clock = iter(np.arange(0.0, 10.0, 0.5)).__next__
+        telem = StepTelemetry("hostL", window=4, clock=clock, wire=True,
+                              schema=JAX_FEATURES)
+        with telem.step(0) as s:
+            s.add("locality", 7.0)      # arbitrary counter name
+            s.add("read_bytes", 1e6)
+        store = StreamingTraceStore(JAX_FEATURES)
+        d = StepDelta.from_bytes(telem.drain_delta().to_bytes())
+        assert d.apply_to(store) == 1
+        task = store.window("steps_000000").seal().task(0)
+        assert task.features["locality"] == 7.0   # extra, not the field
+        assert task.locality == 0                 # field untouched
+
+    def test_wire_pending_buffer_is_bounded(self):
+        """wire=True with no drain consumer must not leak: beyond the cap
+        the oldest rows are shed (with a one-time warning), and a later
+        drain still carries the newest rows."""
+        clock = iter(np.arange(0.0, 1e6, 0.5)).__next__
+        telem = StepTelemetry("hostC", window=4, clock=clock, wire=True,
+                              schema=JAX_FEATURES, wire_pending_cap=10)
+        with pytest.warns(RuntimeWarning, match="wire buffer exceeded"):
+            for step in range(25):
+                with telem.step(step) as s:
+                    s.add("read_bytes", 1.0)
+        assert telem.pending_rows == 10
+        assert telem.wire_overflow_drops == 15
+        d = telem.drain_delta()
+        kept = [tid for st in d.stages for tid in st.task_ids]
+        assert kept[-1] == "hostC/step000024"   # newest survived
+        assert len(kept) == 10
+
+    def test_telemetry_drain_delta(self):
+        clock = iter(np.arange(0.0, 100.0, 0.5)).__next__
+        telem = StepTelemetry("hostA", window=4, clock=clock, wire=True,
+                              schema=JAX_FEATURES)
+        for step in range(6):
+            with telem.step(step) as s:
+                s.add("read_bytes", 1e6)
+        assert telem.pending_rows == 6
+        d = telem.drain_delta()
+        assert telem.pending_rows == 0 and d.host == "hostA" and d.seq == 1
+        assert {s.stage_id for s in d.stages} == {"steps_000000",
+                                                  "steps_000004"}
+        assert d.num_rows == 6
+        # Next drain is empty but advances seq.
+        assert telem.drain_delta().seq == 2
+        plain = StepTelemetry("hostB", window=4)
+        with pytest.raises(RuntimeError):
+            plain.drain_delta()
+
+
+class TestFleetAggregator:
+    def _run_fleet(self, n_hosts=4, steps=20, slow_host=3, slow_from=8):
+        rng = np.random.default_rng(10)
+        clocks = [iter(np.arange(0.0, 1e6, 0.01)) for _ in range(n_hosts)]
+        telems = [StepTelemetry(f"host{h}", window=8,
+                                clock=clocks[h].__next__, wire=True,
+                                schema=JAX_FEATURES)
+                  for h in range(n_hosts)]
+        agg = FleetAggregator(
+            JAX_FEATURES,
+            BigRootsAnalyzer(JAX_FEATURES, window_exact_quantiles=True),
+        )
+        causes = []
+        for step in range(steps):
+            for h, telem in enumerate(telems):
+                slow = h == slow_host and step >= slow_from
+                burn = 250 if slow else 100   # ~2.5s vs ~1s steps
+                with telem.step(step) as s:
+                    for _ in range(burn):
+                        next(clocks[h])
+                    s.add("read_bytes", 64e6 * (2.5 if slow else 1.0)
+                          * (1 + 0.01 * rng.random()))
+                agg.ingest(telem.drain_delta().to_bytes())
+            causes.extend(agg.step())
+        return agg, causes
+
+    def test_cross_host_attribution(self):
+        """The signal only exists fleet-wide: the slow host's rows are
+        stragglers relative to *other hosts'* rows, and the aggregator
+        finds them with the skewed read_bytes attributed."""
+        agg, causes = self._run_fleet()
+        assert agg.num_hosts == 4 and agg.duplicate_drops == 0
+        assert causes, "fleet diagnosis found nothing"
+        offending = {c.task_id.split("/")[0] for c in causes}
+        assert offending == {"host3"}
+        assert {c.feature for c in causes} <= {"read_bytes"}
+
+    def test_duplicate_and_stale_deltas_dropped(self):
+        agg, _ = self._run_fleet(steps=4)
+        telem = StepTelemetry("hostX", window=8, wire=True,
+                              clock=iter(np.arange(0, 100, 0.1)).__next__,
+                              schema=JAX_FEATURES)
+        with telem.step(0) as s:
+            s.add("read_bytes", 1.0)
+        payload = telem.drain_delta().to_bytes()
+        assert agg.ingest(payload) == 1
+        assert agg.ingest(payload) == 0          # same seq: dropped whole
+        assert agg.duplicate_drops == 1
+
+    def test_host_restart_resets_seq_instead_of_starving(self):
+        """A supervisor-restarted host's telemetry starts again at seq 1
+        under a new boot stamp; the aggregator must accept it (restart),
+        not drop it as a duplicate until it re-earns its pre-crash seq —
+        while redeliveries from the dead incarnation stay dropped."""
+        agg = FleetAggregator(JAX_FEATURES)
+        clock = iter(np.arange(0, 1000, 0.1)).__next__
+        telem = StepTelemetry("hostR", window=8, wire=True, clock=clock,
+                              schema=JAX_FEATURES)
+        payloads = []
+        for step in range(3):
+            with telem.step(step) as s:
+                s.add("read_bytes", 1.0)
+            payloads.append(telem.drain_delta().to_bytes())
+            assert agg.ingest(payloads[-1]) == 1          # seq 1, 2, 3
+        # Crash + restart: a fresh telemetry (new boot) for the same host.
+        reborn = StepTelemetry("hostR", window=8, wire=True, clock=clock,
+                               schema=JAX_FEATURES)
+        assert reborn.boot > telem.boot
+        with reborn.step(0) as s:
+            s.add("read_bytes", 1.0)
+        assert agg.ingest(reborn.drain_delta()) == 1      # seq 1: accepted
+        assert agg.host_restarts == 1 and agg.duplicate_drops == 0
+        with reborn.step(1) as s:
+            s.add("read_bytes", 1.0)
+        assert agg.ingest(reborn.drain_delta()) == 1      # seq 2 continues
+        # An at-least-once transport redelivers the dead incarnation's
+        # first delta: its boot's watermark is still known (seq 1 <= 3)
+        # → dropped as a duplicate, NOT misread as a restart.
+        assert agg.ingest(payloads[0]) == 0
+        assert agg.duplicate_drops == 1 and agg.host_restarts == 1
+        # Restart after a BACKWARD clock step (NTP / snapshot restore):
+        # the new boot compares lower than every previous one, but it is
+        # simply an unseen incarnation — accepted, not exiled.
+        reborn2 = StepTelemetry("hostR", window=8, wire=True, clock=clock,
+                                schema=JAX_FEATURES)
+        reborn2.boot = telem.boot - 10_000_000_000   # "30s in the past"
+        with reborn2.step(0) as s:
+            s.add("read_bytes", 1.0)
+        assert agg.ingest(reborn2.drain_delta()) == 1
+        assert agg.host_restarts == 2
+
+    def test_unchanged_windows_skipped_in_sweep(self):
+        """Idle stage windows are not re-analyzed: the sweep covers only
+        windows whose content changed since the last step (cost stays
+        O(active stages), and frozen stages stop re-confirming their
+        causes so decay/forget can act)."""
+        class CountingAnalyzer:
+            def __init__(self):
+                self.calls: list[list[str]] = []
+
+            def analyze_fleet(self, windows):
+                windows = list(windows)
+                self.calls.append(sorted(w.stage_id for w in windows))
+                return [StageAnalysis(w.stage_id, w.live_count, [], [], 0.0)
+                        for w in windows]
+
+        store = StreamingTraceStore(JAX_FEATURES)
+        store.add_row("a0", "sA", "n0", 0.0, 1.0)
+        store.add_row("b0", "sB", "n1", 0.0, 1.0)
+        an = CountingAnalyzer()
+        stream = RootCauseStream(an, store)
+        stream.step()
+        assert an.calls[-1] == ["sA", "sB"]       # first sweep: both
+        stream.step()
+        assert an.calls[-1] == []                 # idle tick: neither
+        store.add_row("a1", "sA", "n0", 0.0, 2.0)
+        stream.step()
+        assert an.calls[-1] == ["sA"]             # only the changed stage
+        # Drop-and-recreate under the same stage_id with the same row
+        # count: the fresh window must NOT alias the old stamp.
+        store.drop_stage("sB")
+        store.add_row("b1", "sB", "n1", 0.0, 3.0)  # recreated, 1 row again
+        stream.step()
+        assert an.calls[-1] == ["sB"]
+
+    def test_timeline_analyzer_keeps_settling_windows_in_sweep(self):
+        """With Eq. 6 timelines in play, a frozen window stays in the
+        sweep until the fleet clock passes its last end + edge_width —
+        tail-window samples arriving after the row must still be able to
+        flip its resource verdicts."""
+        class TimelineAnalyzer:
+            timelines = object()                       # Eq. 6 active
+            thresholds = BigRootsThresholds(edge_width=3.0)
+
+            def __init__(self):
+                self.calls: list[list[str]] = []
+
+            def analyze_fleet(self, windows):
+                windows = list(windows)
+                self.calls.append(sorted(w.stage_id for w in windows))
+                return [StageAnalysis(w.stage_id, w.live_count, [], [], 0.0)
+                        for w in windows]
+
+        store = StreamingTraceStore(JAX_FEATURES)
+        store.add_row("a0", "sA", "n0", 0.0, 10.0)
+        an = TimelineAnalyzer()
+        stream = RootCauseStream(an, store)
+        stream.step()
+        stream.step()
+        # sA is frozen but the fleet clock (its own t_max) has not passed
+        # end + edge_width yet: it must keep being analyzed.
+        assert an.calls[-1] == ["sA"]
+        # A newer stage pushes the clock past 10.0 + 3.0: sA settles for
+        # good, while the newest window remains inside its own horizon.
+        store.add_row("b0", "sB", "n1", 13.5, 14.0)
+        stream.step()
+        assert an.calls[-1] == ["sB"]
+        stream.step()
+        assert an.calls[-1] == ["sB"]
+
+    def test_max_stages_retention(self):
+        agg = FleetAggregator(JAX_FEATURES, max_stages=2)
+        for i in range(5):
+            d = StepDelta("h0", i + 1, [StageDelta(
+                f"st{i}", ["t"], ["n"], np.array([0.0]),
+                np.array([float(i + 1)]), np.zeros(1, np.int16), {}, {})])
+            agg.ingest(d)
+        assert len(agg.store.stage_ids()) == 2
+        assert agg.store.stage_ids() == ["st3", "st4"]
+        assert agg.stages_dropped == 3
+        # A straggling host's late delta for a pruned stage must not
+        # resurrect it as a one-host window (degenerate peer set) or
+        # displace a genuinely newer stage from the retention window.
+        late = StepDelta("h1", 1, [StageDelta(
+            "st0", ["t"], ["n"], np.array([0.0]), np.array([9.0]),
+            np.zeros(1, np.int16), {}, {})])
+        assert agg.ingest(late) == 0
+        assert agg.stale_stage_drops == 1
+        assert agg.store.stage_ids() == ["st3", "st4"]
+
+    def test_merge_stores_entry_point(self):
+        rng = np.random.default_rng(11)
+        host_stores = []
+        for h in range(3):
+            st = StreamingTraceStore(JAX_FEATURES)
+            c = random_host_rows(rng, f"h{h}", 10)
+            st.add_rows("s0", c["task_ids"], c["nodes"], c["starts"],
+                        c["ends"], c["locality"],
+                        {"cpu": c["features"]["cpu"]})
+            host_stores.append(st)
+        agg = FleetAggregator(JAX_FEATURES)
+        assert agg.merge_stores(*host_stores) == 30
+        assert agg.num_live_rows == 30
+        assert [w.stage_id for w in agg.store.stages()] == ["s0"]

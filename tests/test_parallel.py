@@ -10,6 +10,7 @@ import textwrap
 
 import jax
 import pytest
+from conftest import requires_grad_through_barrier
 
 from repro.configs import get_config
 from repro.models import Model, smoke_variant
@@ -69,6 +70,7 @@ class TestParamSpecRules:
 
 @pytest.mark.slow
 class TestVirtualMesh:
+    @requires_grad_through_barrier
     def test_sharded_train_step_matches_single_device(self):
         """2×4 mesh train step ≡ single-device train step (same loss)."""
         run_virtual("""
@@ -163,6 +165,7 @@ class TestVirtualMesh:
             print("PIPELINE_OK")
         """)
 
+    @requires_grad_through_barrier
     def test_small_dryrun_cell_on_8_devices(self):
         """End-to-end lower+compile of a reduced arch on a 2x4 mesh."""
         run_virtual("""
