@@ -42,6 +42,7 @@ BENCHES = {
     "streaming_scale": scale_bench.streaming_scale,
     "fleet_gates": scale_bench.fleet_gates,
     "fleet_merge": scale_bench.fleet_merge,
+    "wire_transport": scale_bench.wire_transport,
     "kernels": scale_bench.kernel_bench,
     "e2e_train": scale_bench.e2e_train_bench,
 }
@@ -110,7 +111,7 @@ def main() -> None:
         wanted = argv
     elif check:
         wanted = ["analyzer_scale", "streaming_scale", "fleet_gates",
-                  "fleet_merge"]
+                  "fleet_merge", "wire_transport"]
     else:
         wanted = list(BENCHES)
 

@@ -467,6 +467,160 @@ def fleet_merge(n_hosts: int = 8, rows_per_host: int = 2048, reps: int = 5):
     return rows, csv
 
 
+def _host_stream_columns(host: int, rows: int, seed: int = 0) -> dict:
+    """What one host's wire stream actually looks like over ``rows``
+    consecutive steps — the workload StepDelta v2's delta compression is
+    built for, unlike ``_incident_columns`` whose i.i.d. random features
+    are a worst case (random mantissas are incompressible losslessly).
+    Hot columns are near-constant step to step: byte counters are exact
+    integers, /proc-derived utilizations are quantized jiffy ratios, GC
+    pauses are mostly exactly 0.0, and steps sit on a regular time grid
+    with only the duration genuinely noisy."""
+    rng = np.random.default_rng(seed + host)
+    steps = np.arange(rows, dtype=np.float64)
+    starts = 1000.0 + steps                      # regular step grid
+    ends = starts + 0.9 + rng.normal(0.0, 0.01, rows)   # noisy duration
+    return {
+        "task_ids": [f"h{host}/step{i:06d}" for i in range(rows)],
+        "nodes": [f"h{host}"] * rows,
+        "starts": starts,
+        "ends": ends,
+        "features": {
+            "cpu": np.round(rng.beta(2, 8, rows), 2),      # 1% jiffy ratio
+            "disk": np.round(rng.uniform(0, 0.05, rows), 2),
+            "network": rng.integers(50_000, 50_100, rows).astype(np.float64),
+            "read_bytes": np.full(rows, 64e6),             # constant batch
+            "gc_time": np.where(rng.random(rows) < 0.05,
+                                rng.uniform(0, 0.05, rows), 0.0),
+            "data_load_time": np.abs(rng.normal(0.2, 0.02, rows)),
+            "h2d_time": np.abs(rng.normal(0.05, 0.005, rows)),
+        },
+    }
+
+
+def _stream_payload(cols: dict, host: int, version: int) -> bytes:
+    from repro.telemetry.events import StageDelta, StepDelta
+
+    n = len(cols["task_ids"])
+    return StepDelta(f"h{host}", 1, [StageDelta(
+        "s0", cols["task_ids"], cols["nodes"], cols["starts"], cols["ends"],
+        np.zeros(n, dtype=np.int16), cols["features"],
+        {k: np.ones(n, dtype=bool) for k in cols["features"]},
+    )]).to_bytes(version=version)
+
+
+def wire_transport(n_hosts: int = 8, rows_per_host: int = 2048,
+                   reps: int = 5):
+    """StepDelta v2 compression + real transport, at the fleet_merge scale
+    (8 hosts × 2048 rows per tick).
+
+    - ``wire_delta_compress_8hosts`` (CI-gated): the full v2 wire tick —
+      decode 8 per-host-stream payloads, ingest into a fresh
+      FleetAggregator, one fleet diagnosis step.  The derived column
+      carries the honest size story: ``ratio`` is v1/v2 bytes on the
+      per-host stream payloads (the acceptance bar is ≥2×), and
+      ``incident_ratio`` the same on ``_incident_columns`` payloads —
+      the adversarial i.i.d.-random case where lossless compression
+      bottoms out near the mantissa entropy floor.
+    - ``wire_v1_tick_8hosts``: the identical tick over v1 payloads (the
+      pre-PR5 wire path), for the apples-to-apples µs comparison.
+    - ``wire_v2_encode_8hosts``: producer-side encode cost of the same
+      8 payloads (each host pays 1/8 of this per tick).
+    - ``transport_tcp_8hosts`` / ``transport_shm_8hosts``: the payloads
+      through a real localhost ``DeltaClient→DeltaServer`` socket (acked,
+      at-least-once) and through the ``ShmRing`` — µs per tick with MB/s
+      derived.  Ungated: localhost scheduling noise swamps a 2× gate.
+    """
+    from repro.serve.fleet import FleetAggregator
+    from repro.telemetry.transport import DeltaClient, DeltaServer, ShmRing
+
+    an = BigRootsAnalyzer(JAX_FEATURES)
+    host_cols = [_host_stream_columns(h, rows_per_host, seed=700)
+                 for h in range(n_hosts)]
+    v1_payloads = [_stream_payload(c, h, 1) for h, c in enumerate(host_cols)]
+    v2_payloads = [_stream_payload(c, h, 2) for h, c in enumerate(host_cols)]
+    v1_bytes = sum(len(p) for p in v1_payloads)
+    v2_bytes = sum(len(p) for p in v2_payloads)
+    ratio = v1_bytes / v2_bytes
+
+    inc1 = inc2 = 0
+    for h in range(n_hosts):
+        cols = _incident_columns(rows_per_host, seed=300 + h)
+        cols["task_ids"] = [f"h{h}/t{i}" for i in range(rows_per_host)]
+        cols["nodes"] = [f"host{h}-n{i % 64}" for i in range(rows_per_host)]
+        inc1 += len(_stream_payload(cols, h, 1))
+        inc2 += len(_stream_payload(cols, h, 2))
+
+    def tick(payloads):
+        agg = FleetAggregator(JAX_FEATURES, an)
+        for p in payloads:
+            agg.ingest(p)
+        return agg.step()
+
+    def timed(fn):
+        fn()
+        best = float("inf")
+        for _ in range(reps):
+            with Timer() as t:
+                fn()
+            best = min(best, t.seconds)
+        return best * 1e6
+
+    v2_us = timed(lambda: tick(v2_payloads))
+    v1_us = timed(lambda: tick(v1_payloads))
+    enc_us = timed(lambda: [_stream_payload(c, h, 2)
+                            for h, c in enumerate(host_cols)])
+
+    tag = f"{n_hosts}hosts"
+    csv = [
+        (f"scale/wire_delta_compress_{tag}", v2_us,
+         f"decode+ingest+diagnose;v1_bytes={v1_bytes};v2_bytes={v2_bytes};"
+         f"ratio={ratio:.2f}x;incident_ratio={inc1 / inc2:.2f}x"),
+        (f"scale/wire_v1_tick_{tag}", v1_us,
+         f"same tick, v1 raw payloads;bytes={v1_bytes}"),
+        (f"scale/wire_v2_encode_{tag}", enc_us,
+         f"producer-side encode, all {n_hosts} payloads"),
+    ]
+    rows = [(n_hosts * rows_per_host, v2_us, v1_us, ratio)]
+
+    # Real transports, localhost.  One tick = every host's payload through
+    # the channel + drained into the aggregator + one diagnosis step.
+    def tcp_tick():
+        agg = FleetAggregator(JAX_FEATURES, an)
+        with DeltaServer(("127.0.0.1", 0)) as server:
+            clients = [DeltaClient(server.address) for _ in range(n_hosts)]
+            try:
+                for h, (c, p) in enumerate(zip(clients, v2_payloads)):
+                    c.send_bytes(p, boot=1, seq=1)
+                for c in clients:
+                    if not c.flush(10.0):
+                        raise RuntimeError("transport bench flush timeout")
+                server.drain_into(agg)
+            finally:
+                for c in clients:
+                    c.close()
+        return agg.step()
+
+    def shm_tick():
+        agg = FleetAggregator(JAX_FEATURES, an)
+        with ShmRing.create(capacity=1 << 22) as ring:
+            for p in v2_payloads:
+                while not ring.push(p):
+                    ring.drain_into(agg)
+            ring.drain_into(agg)
+        return agg.step()
+
+    tcp_us = timed(tcp_tick)
+    shm_us = timed(shm_tick)
+    mbps = lambda us: v2_bytes / (us / 1e6) / 1e6  # noqa: E731
+    csv.append((f"scale/transport_tcp_{tag}", tcp_us,
+                f"socket+ack+drain;{mbps(tcp_us):.0f}MB/s;"
+                "conn setup included"))
+    csv.append((f"scale/transport_shm_{tag}", shm_us,
+                f"shared-memory ring;{mbps(shm_us):.0f}MB/s"))
+    return rows, csv
+
+
 def kernel_bench():
     """Interpret-mode kernel timings vs jnp references (CPU walltime; the
     interesting column is allclose-verified equivalence + shapes)."""

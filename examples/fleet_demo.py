@@ -1,0 +1,311 @@
+"""Cross-process fleet diagnosis demo: N real host processes, one socket.
+
+This is the proof behind ``repro.telemetry.transport``: per-host telemetry
+actually crosses a process boundary (localhost TCP, Unix socket, or the
+shared-memory ring), the launcher-side
+:class:`~repro.serve.FleetAggregator` merges it live, and the result is
+*exactly* what in-process ingestion of the same bytes would have produced
+— plus host-dropout escalation when a process is killed mid-run.
+
+What it does:
+
+1. spawns ``--hosts`` child processes; each runs a
+   ``StepTelemetry(wire=True)`` loop over a deterministic synthetic
+   workload (one host doubles as a periodic straggler with high CPU and
+   slow data loads) and ships a ``StepDelta`` per step through
+   ``DeltaClient.send`` (or a ``ShmRing``);
+2. the parent drains the server into a ``FleetAggregator`` with a
+   wall-clock host lease, runs the fleet diagnosis tick, and *records
+   every event* (each payload's bytes, each diagnosis tick);
+3. once the straggler host has delivered ``--kill-after`` deltas it is
+   SIGKILLed mid-run; the parent keeps ticking until the lease expires
+   and the synthesized ``host_dropout`` escalation fires (severity 2:
+   the host went dark while its nodes carried confirmed causes);
+4. the recorded event sequence is replayed into a fresh in-process
+   aggregator, and the two RootCause streams (dropout findings aside —
+   the replay has no wall clock) must be **byte-identical**, field for
+   field.  Any transport-introduced loss, reorder, duplication, or
+   corruption would break the equality; the ``(boot, seq)`` dedup is
+   what makes the at-least-once channel safe to compare at all.
+
+Run it::
+
+    PYTHONPATH=src python examples/fleet_demo.py                # 3 hosts, TCP
+    PYTHONPATH=src python examples/fleet_demo.py --hosts 2 --steps 24 \\
+        --kill-after 8 --lease 1.0                              # CI shape
+    PYTHONPATH=src python examples/fleet_demo.py --transport unix
+    PYTHONPATH=src python examples/fleet_demo.py --transport shm
+
+Exits non-zero if the cause streams differ or no dropout escalation
+surfaced.  See ``docs/operations.md`` for the production version of this
+topology and ``docs/wire_format.md`` for what the bytes look like.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import BigRootsAnalyzer, JAX_FEATURES  # noqa: E402
+from repro.serve.fleet import DROPOUT_FEATURE, FleetAggregator  # noqa: E402
+from repro.telemetry.events import StepTelemetry  # noqa: E402
+from repro.telemetry.transport import (  # noqa: E402
+    DeltaClient,
+    RingSender,
+    ShmRing,
+)
+
+STRAGGLER_HOST_INDEX = 1  # also the kill target (dies mid-incident)
+
+
+class SimClock:
+    """Deterministic per-host clock: ``advance`` inside phases decides the
+    synthetic step timings."""
+
+    def __init__(self, start: float = 1000.0) -> None:
+        self.t = start
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def host_steps(host_index: int, steps: int, window: int = 8):
+    """The synthetic workload, identical across runs: mostly uniform
+    ~1s steps; the straggler host's first two steps of every window run
+    ~2.6x long with saturated CPU and a slow data load."""
+    rng = np.random.default_rng(1000 + host_index)
+    for step in range(steps):
+        slow = host_index == STRAGGLER_HOST_INDEX and step % window < 2
+        data_load = 1.5 if slow else 0.18 + round(float(rng.uniform(0, 0.04)), 3)
+        compute = 1.1 if slow else 0.8
+        cpu = 0.95 if slow else 0.18 + round(float(rng.uniform(0, 0.04)), 2)
+        yield step, data_load, compute, cpu
+
+
+def run_host(args) -> int:
+    """Child-process body: emit telemetry, ship a delta per step."""
+    if args.transport == "shm":
+        sink = RingSender(ShmRing.attach(args.connect))
+    else:
+        sink = DeltaClient(args.connect)
+    clock = SimClock()
+    telem = StepTelemetry(f"h{args.host_index}", window=8, clock=clock,
+                          wire=True)
+    for step, data_load, compute, cpu in host_steps(args.host_index,
+                                                    args.steps):
+        with telem.step(step) as s:
+            with s.phase("data_load"):
+                clock.advance(data_load)
+            s.add("read_bytes", 64e6)
+            s.add("cpu", cpu)
+            with s.phase("compute"):
+                clock.advance(compute)
+        delta = telem.drain_delta()
+        if args.transport == "shm":
+            # A ring-full send *sheds*; re-send the same delta until the
+            # draining parent makes room (the (boot, seq) watermark makes
+            # an accepted-then-retried duplicate harmless).
+            while not sink.send(delta):
+                time.sleep(0.05)
+        else:
+            sink.send(delta)  # False = buffered; the resend path owns it
+        time.sleep(args.pace)
+    ok = sink.flush(timeout=15.0)
+    sink.close()
+    return 0 if ok else 3
+
+
+def fresh_aggregator(lease: float | None) -> FleetAggregator:
+    return FleetAggregator(
+        JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES), lease=lease,
+    )
+
+
+def replay(events: list) -> list:
+    """In-process union ingest of exactly the payload bytes the parent
+    received, with the identical ingest/step interleaving."""
+    agg = fresh_aggregator(lease=None)
+    causes = []
+    for kind, payload in events:
+        if kind == "ingest":
+            agg.ingest(payload)
+        else:
+            causes.extend(agg.step())
+    return causes
+
+
+def cause_fields(cause) -> tuple:
+    return (cause.task_id, cause.stage_id, cause.node, cause.feature,
+            cause.kind, cause.value, cause.peer_groups, cause.guidance,
+            cause.severity)
+
+
+def run_parent(args) -> int:
+    rings: dict[str, ShmRing] = {}
+    server = None
+    if args.transport == "shm":
+        for i in range(args.hosts):
+            rings[f"h{i}"] = ShmRing.create(capacity=1 << 20)
+        connect_for = {f"h{i}": rings[f"h{i}"].name for i in range(args.hosts)}
+    else:
+        from repro.telemetry.transport import DeltaServer
+
+        if args.transport == "unix":
+            path = os.path.join(tempfile.mkdtemp(prefix="fleet_demo_"),
+                                "agg.sock")
+            server = DeltaServer("unix:" + path)
+            addr = "unix:" + path
+        else:
+            server = DeltaServer(("127.0.0.1", 0))
+            addr = f"{server.address[0]}:{server.address[1]}"
+        connect_for = {f"h{i}": addr for i in range(args.hosts)}
+
+    procs = {}
+    for i in range(args.hosts):
+        procs[f"h{i}"] = subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--child",
+             "--host-index", str(i), "--steps", str(args.steps),
+             "--transport", args.transport,
+             "--connect", connect_for[f"h{i}"],
+             "--pace", str(args.pace)],
+        )
+    kill_target = (f"h{STRAGGLER_HOST_INDEX}"
+                   if args.hosts > 1 and args.kill_after > 0 else None)
+
+    agg = fresh_aggregator(lease=args.lease)
+    events: list[tuple[str, bytes | None]] = []
+    live_causes = []
+    dropout_causes = []
+    per_host_payloads: dict[str, int] = {}
+    killed_at = None
+    deadline = time.time() + args.timeout
+
+    def drain() -> int:
+        """Pull payload bytes off the transport, log + ingest each."""
+        if args.transport == "shm":
+            payloads = []
+            for ring in rings.values():
+                while True:
+                    p = ring.pop()
+                    if p is None:
+                        break
+                    payloads.append(p)
+        else:
+            payloads = server.drain()
+        for p in payloads:
+            events.append(("ingest", p))
+            agg.ingest(p)
+        return len(payloads)
+
+    def tick() -> None:
+        events.append(("step", None))
+        for cause in agg.step():
+            if cause.feature == DROPOUT_FEATURE:
+                dropout_causes.append(cause)
+                print(f"[fleet] DROPOUT sev={cause.severity}: {cause.guidance}")
+            else:
+                live_causes.append(cause)
+                print(f"[fleet] cause: {cause.task_id} <- {cause.feature} "
+                      f"(F={cause.value:.3g}, sev={cause.severity})")
+
+    while time.time() < deadline:
+        n = drain()
+        if n:
+            for host, boots in agg.host_seq.items():
+                per_host_payloads[host] = max(boots.values(), default=0)
+        tick()
+        if (kill_target and killed_at is None
+                and per_host_payloads.get(kill_target, 0) >= args.kill_after):
+            print(f"[fleet] SIGKILL {kill_target} after "
+                  f"{per_host_payloads[kill_target]} deltas")
+            procs[kill_target].kill()
+            killed_at = time.time()
+        others_done = all(
+            p.poll() is not None for h, p in procs.items() if h != kill_target
+        )
+        if others_done and (kill_target is None or dropout_causes):
+            drain()
+            tick()
+            if (args.transport == "shm"
+                    or server.pending == 0):
+                break
+        time.sleep(args.pace)
+
+    for p in procs.values():
+        if p.poll() is None:
+            p.kill()
+        p.wait()
+    if server is not None:
+        server.close()
+    for ring in rings.values():
+        ring.close()
+
+    # -- the proof ---------------------------------------------------------
+    replayed = replay(events)
+    got = [cause_fields(c) for c in live_causes]
+    want = [cause_fields(c) for c in replayed]
+    identical = got == want
+    print(f"\n[fleet_demo] hosts={args.hosts} transport={args.transport} "
+          f"payloads={sum(1 for k, _ in events if k == 'ingest')} "
+          f"rows={agg.rows_ingested} dup_drops={agg.duplicate_drops}")
+    print(f"[fleet_demo] causes over socket: {len(live_causes)}  "
+          f"in-process replay: {len(replayed)}  byte-identical: {identical}")
+    if kill_target:
+        print(f"[fleet_demo] dropout escalations: {len(dropout_causes)} "
+              f"(severities {[c.severity for c in dropout_causes]})")
+    ok = identical and bool(live_causes)
+    if kill_target:
+        ok = ok and bool(dropout_causes)
+    if not ok:
+        if not identical:
+            for g, w in zip(got, want):
+                if g != w:
+                    print("  first divergence:\n   socket:", g,
+                          "\n   replay:", w)
+                    break
+            if len(got) != len(want):
+                print(f"  length mismatch: {len(got)} vs {len(want)}")
+        print("[fleet_demo] FAILED")
+        return 1
+    print("[fleet_demo] OK — transport-delivered causes are byte-identical "
+          "to in-process union ingest"
+          + (", dropout escalated" if kill_target else ""))
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hosts", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--transport", choices=["tcp", "unix", "shm"],
+                    default="tcp")
+    ap.add_argument("--kill-after", type=int, default=12,
+                    help="SIGKILL the straggler host after it delivered "
+                         "this many deltas (0 disables)")
+    ap.add_argument("--lease", type=float, default=1.0,
+                    help="aggregator host lease (seconds of wall silence)")
+    ap.add_argument("--pace", type=float, default=0.02,
+                    help="per-step sleep in hosts and parent ticks")
+    ap.add_argument("--timeout", type=float, default=60.0)
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--host-index", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--connect", default="", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child:
+        return run_host(args)
+    return run_parent(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

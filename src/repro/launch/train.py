@@ -49,6 +49,7 @@ from ..ft.mitigation import MitigationPlanner
 from ..models import Model, smoke_variant
 from ..serve.fleet import FleetAggregator
 from ..telemetry.events import GcTimer, StepTelemetry
+from ..telemetry.transport import DeltaClient, DeltaServer
 from ..telemetry.sampler import SystemSampler
 from ..telemetry.timeline import ResourceTimeline
 from ..train.optimizer import AdamWConfig
@@ -75,6 +76,20 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="live-diagnosis row cap per merged stage window "
                          "(default: unbounded; stages are already bounded "
                          "by --window steps per host)")
+    ap.add_argument("--fleet-connect", default="",
+                    help="ship per-step StepDeltas to a remote aggregator "
+                         "at this address ('host:port' or 'unix:/path') "
+                         "instead of diagnosing locally — the host role "
+                         "of a multi-host launch")
+    ap.add_argument("--fleet-listen", default="",
+                    help="also accept remote hosts' StepDeltas at this "
+                         "address and merge them into this process's "
+                         "fleet diagnosis — the launcher role of a "
+                         "multi-host launch")
+    ap.add_argument("--fleet-lease", type=float, default=10.0,
+                    help="seconds without a delta before a connected host "
+                         "is declared dark and a dropout cause is "
+                         "escalated (only meaningful with --fleet-listen)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--async-ckpt", action="store_true")
@@ -128,16 +143,37 @@ def run(args) -> dict:
     )
     # Live diagnosis runs through the launcher's fleet-aggregation path —
     # per-step StepDeltas merged into per-stage windows, one analyze_fleet
-    # sweep per step.  On this single-host driver it is a fleet of one;
-    # a multi-host launcher feeds the same aggregator N deltas per tick.
+    # sweep per step.  On a single-host run it is a fleet of one.  A real
+    # multi-host launch wires the same path over the socket transport:
+    # hosts run with --fleet-connect (ship deltas, no local sweep) and the
+    # launcher runs with --fleet-listen (drain every host's deltas into
+    # its aggregator each tick, with host-dropout leases armed).
     fleet = None
-    if live_diagnose:
-        fleet = FleetAggregator(
-            JAX_FEATURES,
-            BigRootsAnalyzer(JAX_FEATURES, timelines=timeline),
-            max_rows=(getattr(args, "live_window", 0) or None),
-            max_stages=8,
+    fleet_client = None
+    fleet_server = None
+    fleet_connect = getattr(args, "fleet_connect", "")
+    fleet_listen = getattr(args, "fleet_listen", "")
+    if fleet_connect and fleet_listen:
+        raise SystemExit(
+            "--fleet-connect and --fleet-listen are mutually exclusive "
+            "roles: a host ships its deltas upstream, a launcher "
+            "aggregates — relaying is not supported"
         )
+    if live_diagnose:
+        if fleet_connect:
+            fleet_client = DeltaClient(fleet_connect)
+        else:
+            fleet = FleetAggregator(
+                JAX_FEATURES,
+                BigRootsAnalyzer(JAX_FEATURES, timelines=timeline),
+                max_rows=(getattr(args, "live_window", 0) or None),
+                max_stages=8,
+                lease=(getattr(args, "fleet_lease", 10.0)
+                       if fleet_listen else None),
+            )
+            if fleet_listen:
+                fleet_server = DeltaServer(fleet_listen)
+                print(f"[fleet] aggregating at {fleet_server.address}")
     live_causes: list[dict] = []
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
@@ -177,7 +213,11 @@ def run(args) -> dict:
                         ckpt.save(step, state["params"],
                                   blocking=not args.async_ckpt)
             losses.append(loss)
-            if fleet is not None:
+            if fleet_client is not None:
+                fleet_client.send(telem.drain_delta())
+            elif fleet is not None:
+                if fleet_server is not None:
+                    fleet_server.drain_into(fleet)
                 fleet.ingest_host(telem)
                 for cause in fleet.step():
                     live_causes.append({
@@ -195,6 +235,34 @@ def run(args) -> dict:
     gc_timer.uninstall()
     if ckpt:
         ckpt.wait()
+    if fleet_client is not None:
+        # At-least-once: block until the aggregator acked everything this
+        # host produced (a crash-free run must lose nothing), then hang up.
+        if not fleet_client.flush(timeout=10.0):
+            print(f"[fleet] WARNING: aggregator unreachable at exit — "
+                  f"{fleet_client.unacked} deltas unacked, "
+                  f"{fleet_client.resend_drops} shed earlier; the fleet "
+                  f"view of this host is incomplete")
+        fleet_client.close()
+    if fleet_server is not None:
+        # Quiesce before closing: frames the server acks are a promise to
+        # ingest, and straggling hosts may still be flushing their tails.
+        # Keep draining until two consecutive quiet passes (or a grace
+        # deadline), then run one last sweep — only then drop the socket.
+        grace = time.time() + 5.0
+        quiet = 0
+        while quiet < 2 and time.time() < grace:
+            if fleet_server.drain_into(fleet) == 0 and fleet_server.pending == 0:
+                quiet += 1
+            else:
+                quiet = 0
+            time.sleep(0.2)
+        for cause in fleet.step():
+            live_causes.append({
+                "step": args.steps, "task": cause.task_id,
+                "feature": cause.feature, "value": cause.value,
+            })
+        fleet_server.close()
 
     # ---- offline BigRoots analysis ---------------------------------------
     trace = telem.trace

@@ -21,6 +21,13 @@ others with ``fleet_step=False`` (they only ingest) or pass
 ``fleet_step=False`` everywhere and call ``aggregator.step()`` from the
 launcher once per tick — N engines each stepping would run N sweeps per
 tick and advance the dedup stream's decay clock N× too fast.
+
+When the aggregator runs in *another process*, pass ``delta_sink`` instead
+of ``fleet``: any object with ``send(delta)`` —
+:class:`~repro.telemetry.transport.DeltaClient` (socket, cross-machine) or
+:class:`~repro.telemetry.transport.RingSender` (same-machine shared-memory
+ring).  The engine then only ships its per-step delta; the aggregator
+process drives the sweep and owns the causes.
 """
 from __future__ import annotations
 
@@ -87,6 +94,7 @@ class ServeEngine:
         live_analyzer=None,
         fleet: FleetAggregator | None = None,
         fleet_step: bool = True,
+        delta_sink=None,
     ) -> None:
         self.model = model
         self.params = params
@@ -103,8 +111,14 @@ class ServeEngine:
         self.diagnosis: RootCauseStream | None = None
         self.fleet = fleet
         self.fleet_step = fleet_step
+        self.delta_sink = delta_sink
         self.live_root_causes: list = []
-        if fleet is not None:
+        if fleet is not None and delta_sink is not None:
+            raise ValueError(
+                "pass either an in-process fleet aggregator or a "
+                "delta_sink transport, not both"
+            )
+        if fleet is not None or delta_sink is not None:
             if telemetry is None or not telemetry.wire:
                 raise ValueError(
                     "fleet aggregation needs StepTelemetry(wire=True)"
@@ -159,6 +173,8 @@ class ServeEngine:
                     self.fleet.ingest_host(self.telemetry)
                     if self.fleet_step:
                         self.live_root_causes.extend(self.fleet.step())
+                elif self.delta_sink is not None:
+                    self.delta_sink.send(self.telemetry.drain_delta())
                 elif self.diagnosis is not None:
                     self.live_root_causes.extend(self.diagnosis.step())
             else:

@@ -35,10 +35,18 @@ enter through :meth:`merge_stores`, which uses the column-level
 """
 from __future__ import annotations
 
-from ..core.analyzer import BigRootsAnalyzer
-from ..core.features import FeatureSchema
+import time
+
+from ..core.analyzer import BigRootsAnalyzer, RootCause
+from ..core.features import FeatureKind, FeatureSchema
 from ..core.window import RootCauseStream, StreamingTraceStore
 from ..telemetry.events import StepDelta, StepTelemetry
+
+#: Feature name of the synthesized cause a host-dropout escalation emits.
+#: Not part of any FeatureSchema — it never gates; it exists so dropout
+#: findings flow through the same RootCause pipeline (reports, mitigation
+#: planning, dedup) as Eq. 5 findings.
+DROPOUT_FEATURE = "host_dropout"
 
 
 class FleetAggregator:
@@ -67,6 +75,27 @@ class FleetAggregator:
         exceed it, the oldest-created windows are dropped (an always-on
         loop opens a fresh step-window stage every N steps; exhausted ones
         must not accumulate).  ``None`` disables.
+    lease, clock:
+        Host-dropout detection: a host whose last accepted delta is more
+        than ``lease`` seconds of wall clock old (``clock`` defaults to
+        ``time.time``; injectable for tests) is declared *dark* at the
+        next :meth:`step` — once per outage, a synthesized
+        :class:`~repro.core.analyzer.RootCause` with
+        ``feature == DROPOUT_FEATURE`` is appended to the tick's causes,
+        with ``severity`` escalated to 2 when the host's nodes carried a
+        confirmed cause within the stream's ``decay_steps`` before going
+        dark (a host dying *mid-incident* is the finding most worth
+        paging on: the straggler signal and its telemetry vanished
+        together).  A dark host that reports again rejoins silently
+        (``host_rejoins``) — its ``(boot, seq)`` watermarks were kept, so
+        redelivered deltas still dedup.  ``lease=None`` (default)
+        disables dropout tracking.
+
+    Silent hosts must not freeze retention: every :meth:`step` also
+    advances each time-spanned stage window's watermark to the *fleet*
+    clock (the max task-end seen across all windows), so stages whose
+    hosts went dark keep decaying out of their windows while the rest of
+    the fleet moves on, instead of pinning stale rows as eternal peers.
 
     Duplicate delivery and restarts: deltas carry ``(boot, seq)`` — the
     producer incarnation stamp and its per-drain counter.  The aggregator
@@ -105,6 +134,8 @@ class FleetAggregator:
         decay_steps: int | None = 256,
         forget_steps: int | None = None,
         max_stages: int | None = 64,
+        lease: float | None = None,
+        clock=time.time,
     ) -> None:
         self.schema = schema
         self.analyzer = analyzer if analyzer is not None else BigRootsAnalyzer(schema)
@@ -119,6 +150,8 @@ class FleetAggregator:
             decay_steps=decay_steps, forget_steps=forget_steps,
         )
         self.max_stages = max_stages
+        self.lease = None if lease is None else float(lease)
+        self._clock = clock
         # host → {boot: last accepted seq}, newest-seen boots last; capped
         # at _MAX_BOOTS_PER_HOST incarnations (see ingest).
         self.host_seq: dict[str, dict[int, int]] = {}
@@ -132,6 +165,17 @@ class FleetAggregator:
         # Insertion-ordered tombstones of pruned stage ids (bounded): a
         # straggling host's late delta must not resurrect a pruned stage.
         self._pruned: dict[str, None] = {}
+        # Host-liveness bookkeeping (see the lease parameter).
+        self.host_dropouts = 0
+        self.host_rejoins = 0
+        self.dropped_hosts: set[str] = set()
+        self._host_last_wall: dict[str, float] = {}
+        self._host_nodes: dict[str, set[str]] = {}
+        self._host_last_stage: dict[str, str] = {}
+        # node → step() index of its last *emitted* cause; feeds the
+        # mid-incident severity escalation of dropout findings.
+        self._node_last_cause: dict[str, int] = {}
+        self._ticks = 0
 
     # -- ingest ------------------------------------------------------------
     def ingest(self, delta: StepDelta | bytes) -> int:
@@ -173,6 +217,15 @@ class FleetAggregator:
             del boots[next(iter(boots))]
         self.deltas_ingested += 1
         self.rows_ingested += rows
+        if self.lease is not None:
+            self._host_last_wall[delta.host] = self._clock()
+            if delta.host in self.dropped_hosts:
+                self.dropped_hosts.discard(delta.host)
+                self.host_rejoins += 1
+            nodes = self._host_nodes.setdefault(delta.host, set())
+            for s in delta.stages:
+                nodes.update(s.nodes)
+                self._host_last_stage[delta.host] = s.stage_id
         self._prune_stages()
         return rows
 
@@ -202,8 +255,70 @@ class FleetAggregator:
         """One fleet-wide diagnosis tick over every merged stage window
         (single batched gate evaluation via ``analyze_fleet``).  Returns
         the newly confirmed :class:`~repro.core.analyzer.RootCause`\\ s
-        (the stream's emit-once/decay dedup applies)."""
-        return self.stream.step()
+        (the stream's emit-once/decay dedup applies), plus one synthesized
+        ``DROPOUT_FEATURE`` cause per host whose lease just expired (see
+        the class docstring).  Retained time-spanned windows also advance
+        to the fleet clock here so silent hosts' stages keep decaying."""
+        causes = self.stream.step()
+        self._ticks += 1
+        for cause in causes:
+            self._node_last_cause[cause.node] = self._ticks
+        if self.lease is not None:
+            causes.extend(self._check_leases())
+        self._advance_fleet_clock()
+        return causes
+
+    def _check_leases(self) -> list[RootCause]:
+        now = self._clock()
+        escalated: list[RootCause] = []
+        horizon = self.stream.decay_steps or 256
+        for host, last in self._host_last_wall.items():
+            silent = now - last
+            if host in self.dropped_hosts or silent <= self.lease:
+                continue
+            self.dropped_hosts.add(host)
+            self.host_dropouts += 1
+            nodes = sorted(self._host_nodes.get(host, {host}))
+            mid_incident = any(
+                self._ticks - self._node_last_cause.get(nd, -(horizon + 1))
+                <= horizon
+                for nd in nodes
+            )
+            escalated.append(RootCause(
+                task_id=f"{host}/dropout",
+                stage_id=self._host_last_stage.get(host, ""),
+                node=nodes[0] if nodes else host,
+                feature=DROPOUT_FEATURE,
+                kind=FeatureKind.DISCRETE,
+                value=float(silent),
+                peer_groups=("fleet",),
+                guidance=(
+                    f"host {host!r} stopped reporting {silent:.1f}s ago "
+                    f"(lease {self.lease:.1f}s)"
+                    + (" while its nodes carried confirmed straggler "
+                       "causes — the incident and its telemetry vanished "
+                       "together; treat as a failed host, not a recovery"
+                       if mid_incident else
+                       "; restart the producer or drop the host from the "
+                       "fleet roster")
+                ),
+                severity=2 if mid_incident else 1,
+            ))
+        return escalated
+
+    def _advance_fleet_clock(self) -> None:
+        """Advance every time-spanned window's watermark to the fleet
+        clock (max task-end across windows): a stage whose hosts all went
+        dark never sees another ingest-driven ``advance``, and without
+        this its rows would sit as eternal peers in retained windows."""
+        if self.store.span is None:
+            return
+        windows = list(self.store.stages())
+        now = max((w.t_max for w in windows), default=None)
+        if now is None:
+            return
+        for w in windows:
+            w.advance(now)
 
     @property
     def last_analysis(self):
@@ -212,6 +327,11 @@ class FleetAggregator:
     @property
     def num_hosts(self) -> int:
         return len(self.host_seq)
+
+    @property
+    def num_live_hosts(self) -> int:
+        """Hosts ever seen minus those currently past their lease."""
+        return len(self.host_seq) - len(self.dropped_hosts)
 
     @property
     def num_live_rows(self) -> int:

@@ -4,18 +4,29 @@ This is the data-acquisition substrate under BigRoots: the Spark-log +
 mpstat/iostat/sar layer of the paper, re-homed onto an SPMD training host
 (DESIGN.md §2 mapping table).
 """
-from .events import GcTimer, StageDelta, StepDelta, StepTelemetry
+from .events import (
+    GcTimer,
+    StageDelta,
+    StepDelta,
+    StepTelemetry,
+    WireFormatError,
+)
 from .sampler import SystemSampler, read_cpu_sample, read_disk_sample, read_net_sample
 from .timeline import ResourceTimeline, TimelineCursor
+from .transport import DeltaClient, DeltaServer, ShmRing
 
 __all__ = [
+    "DeltaClient",
+    "DeltaServer",
     "GcTimer",
     "ResourceTimeline",
+    "ShmRing",
     "StageDelta",
     "StepDelta",
     "StepTelemetry",
     "TimelineCursor",
     "SystemSampler",
+    "WireFormatError",
     "read_cpu_sample",
     "read_disk_sample",
     "read_net_sample",

@@ -13,15 +13,32 @@ Fleet wire format
 Cross-node comparison is the whole BigRoots premise, so per-host telemetry
 must reach a central aggregator.  :class:`StepDelta` is the unit shipped:
 the columnar block of rows a host emitted since its last drain, grouped by
-stage, serialized by :meth:`StepDelta.to_bytes` as one small JSON header
-(strings: host, stage ids, task ids, node names, column names) followed by
-raw little-endian numeric buffers — no pickling, no per-row framing, and a
-decode that is a handful of ``np.frombuffer`` views.  A per-column
-``present`` mask rides along so "recorded as 0.0" and "absent" stay
-distinct across the wire (the same invariant the columnar substrate keeps
-in memory).  ``StepTelemetry(wire=True)`` accumulates pending rows and
+stage.  Two self-describing wire encodings exist (dispatched on the 4-byte
+magic; ``docs/wire_format.md`` is the normative spec):
+
+- **v1** (``BRD1``): one small JSON header (strings: host, stage ids, task
+  ids, node names, column names) followed by raw little-endian numeric
+  buffers — no pickling, no per-row framing, and a decode that is a
+  handful of ``np.frombuffer`` views.
+- **v2** (``BRD2``, the :meth:`StepDelta.to_bytes` default): the same
+  header and column order, but every numeric column is delta-compressed —
+  XOR against the previous row, a packed changed-row bitmask, byte-plane
+  transposed residuals — and the whole body is DEFLATE-compressed.  A
+  host's hot columns are near-constant step to step (constant batch
+  bytes, quantized /proc counters, zero GC pauses), so most columns
+  collapse to a bitmask.  The encoding is stateless per payload: a
+  resent or reordered delta decodes without any reference state.
+
+A per-column ``present`` mask rides along in both versions so "recorded
+as 0.0" and "absent" stay distinct across the wire (the same invariant
+the columnar substrate keeps in memory).  :meth:`StepDelta.from_bytes`
+parses both versions, validating every header-declared length against the
+actual buffer before touching numpy — a truncated or corrupt frame raises
+:class:`WireFormatError`, never a reshape error deep in merge.
+``StepTelemetry(wire=True)`` accumulates pending rows and
 :meth:`StepTelemetry.drain_delta` cuts a delta; the launcher-side consumer
-is :class:`repro.serve.FleetAggregator`.
+is :class:`repro.serve.FleetAggregator`, and
+:mod:`repro.telemetry.transport` carries payloads across processes.
 """
 from __future__ import annotations
 
@@ -29,6 +46,7 @@ import gc
 import json
 import struct
 import time
+import zlib
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
@@ -39,7 +57,85 @@ from ..core.frame import TraceStore
 from ..core.window import SlidingStageWindow, StreamingTraceStore
 from .timeline import ResourceTimeline
 
-_WIRE_MAGIC = b"BRD1"
+WIRE_V1_MAGIC = b"BRD1"
+WIRE_V2_MAGIC = b"BRD2"
+_WIRE_MAGIC = WIRE_V1_MAGIC  # back-compat alias
+
+#: Refuse headers claiming more than this many rows in one stage block —
+#: far above any real drain, and it bounds what a corrupt length field can
+#: make the decoder allocate.
+_MAX_ROWS_PER_STAGE = 1 << 24
+
+#: Refuse v2 frames declaring a decompressed body beyond this: the
+#: declared length caps decompression *before* it runs, so a small
+#: high-ratio DEFLATE bomb cannot make the decoder materialize gigabytes.
+_MAX_BODY_BYTES = 1 << 30
+
+
+class WireFormatError(ValueError):
+    """A wire payload failed structural validation: bad magic, truncated
+    or over-long buffers vs the header-declared lengths, a malformed JSON
+    header, or a corrupt compression stream.  Subclasses ``ValueError``
+    so pre-existing ``except ValueError`` callers keep working."""
+
+
+def _need(buf_len: int, off: int, count: int, what: str) -> None:
+    if count < 0 or off + count > buf_len:
+        raise WireFormatError(
+            f"truncated StepDelta payload: {what} needs {count} bytes at "
+            f"offset {off} but only {buf_len - off} remain"
+        )
+
+
+# -- v2 column codecs --------------------------------------------------------
+# Each numeric column is encoded as: XOR of every row against the previous
+# row (first row against 0), a packed bitmask of rows whose XOR is nonzero,
+# a u32 count of those rows, then the changed rows' XOR words transposed
+# into byte planes (all byte-0s, then all byte-1s, ...).  Near-constant
+# columns collapse to the bitmask; for varying columns the transpose groups
+# the shared sign/exponent bytes into runs the final DEFLATE pass removes.
+# Decode is exact: scatter residuals, prefix-XOR, reinterpret — bit
+# identical to the raw column, NaNs and signed zeros included.
+
+def _delta_encode(words: np.ndarray) -> bytes:
+    """``words``: little-endian unsigned view of one column (u64/u16)."""
+    n = words.size
+    x = words.copy()
+    x[1:] ^= words[:-1]
+    changed = x != 0
+    k = int(changed.sum())
+    resid = np.ascontiguousarray(x[changed]).view(np.uint8)
+    planes = resid.reshape(k, words.dtype.itemsize).T if k else resid
+    return (np.packbits(changed).tobytes() + struct.pack("<I", k)
+            + np.ascontiguousarray(planes).tobytes())
+
+
+def _delta_decode(buf: bytes, off: int, n: int, dtype: str,
+                  what: str) -> tuple[np.ndarray, int]:
+    """Inverse of :func:`_delta_encode`; returns (column, new offset)."""
+    itemsize = np.dtype(dtype).itemsize
+    nmask = (n + 7) // 8
+    _need(len(buf), off, nmask + 4, f"{what} changed-mask")
+    changed = np.unpackbits(
+        np.frombuffer(buf, np.uint8, nmask, off), count=n
+    ).astype(bool)
+    off += nmask
+    (k,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    if k != int(changed.sum()):
+        raise WireFormatError(
+            f"corrupt {what}: {k} residuals declared but the changed-mask "
+            f"has {int(changed.sum())} set bits"
+        )
+    _need(len(buf), off, k * itemsize, f"{what} residuals")
+    planes = np.frombuffer(buf, np.uint8, k * itemsize, off)
+    off += k * itemsize
+    x = np.zeros(n, dtype=dtype)
+    if k:
+        x[changed] = np.ascontiguousarray(
+            planes.reshape(itemsize, k).T
+        ).view(dtype).ravel()
+    return np.bitwise_xor.accumulate(x), off
 
 
 class GcTimer:
@@ -137,11 +233,7 @@ class StepDelta:
         return ingested
 
     # -- wire format -------------------------------------------------------
-    def to_bytes(self) -> bytes:
-        """Serialize: magic, u32 header length, JSON header (strings only),
-        then per stage the raw ``<f8/<i2/u8`` column buffers in header
-        order.  Column values where ``present`` is False are encoded as
-        0.0 (the decoder re-imposes the mask)."""
+    def _header_bytes(self) -> bytes:
         header = {
             "host": self.host,
             "seq": self.seq,
@@ -157,55 +249,236 @@ class StepDelta:
                 for s in self.stages
             ],
         }
-        head = json.dumps(header, separators=(",", ":")).encode()
-        parts = [_WIRE_MAGIC, struct.pack("<I", len(head)), head]
+        return json.dumps(header, separators=(",", ":")).encode()
+
+    def _canonical_column(self, s: "StageDelta", name: str) -> np.ndarray:
+        """Column values with masked-out slots forced to 0.0: whatever the
+        producer left in the buffer, the wire carries the canonical form
+        (the decoder re-imposes the mask either way)."""
+        vals = np.asarray(s.columns[name], dtype="<f8")
+        mask = s.present.get(name)
+        if mask is not None:
+            vals = np.where(np.asarray(mask, dtype=bool), vals, 0.0)
+        return np.ascontiguousarray(vals, dtype="<f8")
+
+    def _present_column(self, s: "StageDelta", name: str) -> np.ndarray:
+        return np.ascontiguousarray(
+            s.present.get(name, np.ones(len(s), dtype=bool)), dtype="u1"
+        )
+
+    def to_bytes(self, version: int = 2) -> bytes:
+        """Serialize this delta as a self-contained wire payload.
+
+        ``version=2`` (default): magic ``BRD2``, u32 decompressed body
+        length, then a DEFLATE stream of [u32 header length, JSON header,
+        per-stage delta-compressed column sections] — see the module
+        docstring and ``docs/wire_format.md``.  ``version=1``: magic
+        ``BRD1``, u32 header length, JSON header, then per stage the raw
+        ``<f8/<i2/u1`` column buffers in header order.  Both are
+        stateless per payload and decoded by :meth:`from_bytes` off the
+        magic alone.  Column values where ``present`` is False are
+        encoded as 0.0 (the decoder re-imposes the mask)."""
+        head = self._header_bytes()
+        if version == 1:
+            parts = [WIRE_V1_MAGIC, struct.pack("<I", len(head)), head]
+            for s in self.stages:
+                parts.append(np.ascontiguousarray(s.starts, dtype="<f8").tobytes())
+                parts.append(np.ascontiguousarray(s.ends, dtype="<f8").tobytes())
+                parts.append(np.ascontiguousarray(s.locality, dtype="<i2").tobytes())
+                for name in s.columns:
+                    parts.append(self._canonical_column(s, name).tobytes())
+                    parts.append(self._present_column(s, name).tobytes())
+            return b"".join(parts)
+        if version != 2:
+            raise ValueError(f"unknown StepDelta wire version {version!r}")
+        parts = [struct.pack("<I", len(head)), head]
         for s in self.stages:
-            parts.append(np.ascontiguousarray(s.starts, dtype="<f8").tobytes())
-            parts.append(np.ascontiguousarray(s.ends, dtype="<f8").tobytes())
-            parts.append(np.ascontiguousarray(s.locality, dtype="<i2").tobytes())
+            for col in (np.ascontiguousarray(s.starts, dtype="<f8"),
+                        np.ascontiguousarray(s.ends, dtype="<f8")):
+                parts.append(_delta_encode(col.view("<u8")))
+            loc = np.ascontiguousarray(s.locality, dtype="<i2")
+            parts.append(_delta_encode(loc.view("<u2")))
             for name in s.columns:
-                vals = np.asarray(s.columns[name], dtype="<f8")
-                mask = s.present.get(name)
-                if mask is not None:
-                    # Canonical payload: masked-out slots really are 0.0 on
-                    # the wire, whatever the producer left in the buffer.
-                    vals = np.where(np.asarray(mask, dtype=bool), vals, 0.0)
-                parts.append(np.ascontiguousarray(vals, dtype="<f8").tobytes())
                 parts.append(
-                    np.ascontiguousarray(
-                        s.present.get(name, np.ones(len(s), dtype=bool)),
-                        dtype="u1",
-                    ).tobytes()
+                    _delta_encode(self._canonical_column(s, name).view("<u8"))
                 )
-        return b"".join(parts)
+                parts.append(np.packbits(
+                    self._present_column(s, name).astype(bool)
+                ).tobytes())
+        body = b"".join(parts)
+        return (WIRE_V2_MAGIC + struct.pack("<I", len(body))
+                + zlib.compress(body, 6))
+
+    @staticmethod
+    def wire_version(buf: bytes) -> int:
+        """The wire version a payload's magic declares (without decoding);
+        raises :class:`WireFormatError` on an unknown magic."""
+        magic = bytes(buf[:4])
+        if magic == WIRE_V1_MAGIC:
+            return 1
+        if magic == WIRE_V2_MAGIC:
+            return 2
+        raise WireFormatError(
+            f"not a StepDelta wire buffer (bad magic {magic!r})"
+        )
+
+    @staticmethod
+    def _validated_header(head: bytes) -> dict:
+        try:
+            header = json.loads(head.decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise WireFormatError(f"corrupt StepDelta header: {e}") from e
+        if not isinstance(header, dict) or not isinstance(
+            header.get("stages"), list
+        ):
+            raise WireFormatError("StepDelta header is not an object with stages")
+        try:
+            if not isinstance(header["host"], str):
+                raise TypeError("host is not a string")
+            int(header["seq"])
+            int(header.get("boot", 0))
+        except (KeyError, TypeError, ValueError) as e:
+            raise WireFormatError(
+                f"StepDelta header missing/malformed host/seq/boot: {e}"
+            ) from e
+        for sh in header["stages"]:
+            if not isinstance(sh, dict):
+                raise WireFormatError("StepDelta stage header is not an object")
+            try:
+                if not isinstance(sh["stage_id"], str):
+                    raise TypeError("stage_id is not a string")
+                n = int(sh["n"])
+                task_ids, nodes = sh["task_ids"], sh["nodes"]
+                columns = sh["columns"]
+                if not isinstance(task_ids, list) or not isinstance(nodes, list):
+                    raise TypeError("task_ids/nodes are not lists")
+                if not isinstance(columns, list) or not all(
+                    isinstance(c, str) for c in columns
+                ):
+                    raise TypeError("columns is not a list of strings")
+            except (KeyError, TypeError, ValueError) as e:
+                raise WireFormatError(f"malformed stage header: {e}") from e
+            if not 0 <= n <= _MAX_ROWS_PER_STAGE:
+                raise WireFormatError(f"implausible stage row count {n}")
+            if len(task_ids) != n or len(nodes) != n:
+                raise WireFormatError(
+                    f"stage {sh['stage_id']!r} declares n={n} but has "
+                    f"{len(task_ids)} task_ids / {len(nodes)} nodes"
+                )
+        return header
 
     @classmethod
     def from_bytes(cls, buf: bytes) -> "StepDelta":
-        if buf[:4] != _WIRE_MAGIC:
-            raise ValueError("not a StepDelta wire buffer (bad magic)")
-        (hlen,) = struct.unpack_from("<I", buf, 4)
-        header = json.loads(buf[8 : 8 + hlen].decode())
+        """Decode a v1 or v2 payload (dispatched on the magic).  Every
+        header-declared length is validated against the actual remaining
+        bytes before any buffer view is taken; a truncated, over-long, or
+        corrupt frame raises :class:`WireFormatError`."""
+        buf = bytes(buf)
+        if len(buf) < 8:
+            raise WireFormatError(
+                f"StepDelta payload too short ({len(buf)} bytes)"
+            )
+        version = cls.wire_version(buf)
+        (length,) = struct.unpack_from("<I", buf, 4)
+        if version == 2:
+            if length > _MAX_BODY_BYTES:
+                raise WireFormatError(
+                    f"StepDelta v2 declares an implausible {length}-byte body"
+                )
+            try:
+                z = zlib.decompressobj()
+                # max_length caps allocation at the declared size *before*
+                # inflating: a lying header cannot decompress-bomb us.
+                body = z.decompress(buf[8:], length + 1)
+            except zlib.error as e:
+                raise WireFormatError(
+                    f"corrupt StepDelta v2 compression stream: {e}"
+                ) from e
+            if len(body) != length:
+                raise WireFormatError(
+                    f"StepDelta v2 body is {len(body)}+ bytes but the frame "
+                    f"declares {length}"
+                )
+            if not z.eof or z.unused_data:
+                raise WireFormatError(
+                    "StepDelta v2 compression stream is truncated or has "
+                    "trailing bytes"
+                )
+            _need(len(body), 0, 4, "v2 header length")
+            (hlen,) = struct.unpack_from("<I", body, 0)
+            _need(len(body), 4, hlen, "v2 header")
+            header = cls._validated_header(body[4 : 4 + hlen])
+            off = 4 + hlen
+            stages = []
+            for sh in header["stages"]:
+                n = int(sh["n"])
+                sid = sh["stage_id"]
+                starts, off = _delta_decode(body, off, n, "<u8",
+                                            f"stage {sid!r} starts")
+                ends, off = _delta_decode(body, off, n, "<u8",
+                                          f"stage {sid!r} ends")
+                loc, off = _delta_decode(body, off, n, "<u2",
+                                         f"stage {sid!r} locality")
+                columns: dict[str, np.ndarray] = {}
+                present: dict[str, np.ndarray] = {}
+                nmask = (n + 7) // 8
+                for name in sh["columns"]:
+                    what = f"stage {sid!r} column {name!r}"
+                    col, off = _delta_decode(body, off, n, "<u8", what)
+                    columns[name] = col.view("<f8").astype(np.float64)
+                    _need(len(body), off, nmask, f"{what} present mask")
+                    present[name] = np.unpackbits(
+                        np.frombuffer(body, np.uint8, nmask, off), count=n
+                    ).astype(bool)
+                    off += nmask
+                stages.append(StageDelta(
+                    sid, list(sh["task_ids"]), list(sh["nodes"]),
+                    starts.view("<f8").astype(np.float64),
+                    ends.view("<f8").astype(np.float64),
+                    loc.view("<i2").astype(np.int16),
+                    columns, present,
+                ))
+            if off != len(body):
+                raise WireFormatError(
+                    f"StepDelta v2 body has {len(body) - off} trailing bytes"
+                )
+            return cls(header["host"], int(header["seq"]), stages,
+                       boot=int(header.get("boot", 0)))
+
+        hlen = length
+        _need(len(buf), 8, hlen, "v1 header")
+        header = cls._validated_header(buf[8 : 8 + hlen])
         off = 8 + hlen
-        stages: list[StageDelta] = []
+        stages = []
         for sh in header["stages"]:
             n = int(sh["n"])
-            def take(dtype, count):
+            sid = sh["stage_id"]
+
+            def take(dtype, what):
                 nonlocal off
-                arr = np.frombuffer(buf, dtype=dtype, count=count, offset=off)
+                itemsize = np.dtype(dtype).itemsize
+                _need(len(buf), off, n * itemsize,
+                      f"stage {sid!r} {what}")
+                arr = np.frombuffer(buf, dtype=dtype, count=n, offset=off)
                 off += arr.nbytes
                 return arr
-            starts = take("<f8", n).astype(np.float64)
-            ends = take("<f8", n).astype(np.float64)
-            locality = take("<i2", n).astype(np.int16)
-            columns: dict[str, np.ndarray] = {}
-            present: dict[str, np.ndarray] = {}
+
+            starts = take("<f8", "starts").astype(np.float64)
+            ends = take("<f8", "ends").astype(np.float64)
+            locality = take("<i2", "locality").astype(np.int16)
+            columns = {}
+            present = {}
             for name in sh["columns"]:
-                columns[name] = take("<f8", n).astype(np.float64)
-                present[name] = take("u1", n).astype(bool)
+                columns[name] = take("<f8", f"column {name!r}").astype(np.float64)
+                present[name] = take("u1", f"column {name!r} mask").astype(bool)
             stages.append(StageDelta(
-                sh["stage_id"], list(sh["task_ids"]), list(sh["nodes"]),
+                sid, list(sh["task_ids"]), list(sh["nodes"]),
                 starts, ends, locality, columns, present,
             ))
+        if off != len(buf):
+            raise WireFormatError(
+                f"StepDelta v1 payload has {len(buf) - off} trailing bytes"
+            )
         return cls(header["host"], int(header["seq"]), stages,
                    boot=int(header.get("boot", 0)))
 

@@ -1,0 +1,722 @@
+"""Cross-process :class:`~repro.telemetry.events.StepDelta` transport.
+
+PR 4 built the fleet-merge substrate but left the transport in-process:
+``FleetAggregator.ingest`` only ever saw bytes handed to it by the same
+Python process.  This module is the real boundary crossing — per-host
+producers on one side, the launcher-side aggregator on the other — with
+loss, reordering, and reconnection handled explicitly:
+
+- :class:`DeltaServer` / :class:`DeltaClient`: a length-prefixed framed
+  channel over TCP or a Unix-domain socket.  The client keeps every sent
+  delta in a bounded resend buffer until the server acknowledges its
+  ``(boot, seq)``; a dropped connection reconnects with backoff and
+  replays the unacked tail in order.  Delivery is therefore
+  **at-least-once and per-host FIFO** — exactly the contract
+  :class:`~repro.serve.FleetAggregator`'s per-incarnation ``(boot, seq)``
+  watermark dedups safely (a replayed delta is dropped whole; a restarted
+  host's new ``boot`` is accepted immediately).
+- :class:`ShmRing`: a same-machine shared-memory SPSC ring fast path —
+  one producer process pushes framed payloads, one consumer pops them,
+  no syscalls per record and no serialization beyond the wire payload
+  itself.  No acks: within one machine the ring is lossless while both
+  ends are alive, and a full ring back-pressures the producer
+  (``push`` returns False).
+
+Framing (normative spec in ``docs/wire_format.md``): every socket frame is
+
+    u32 LE body length | u8 frame type | body
+
+with type ``DATA`` (1) carrying ``u64 boot | u64 seq | StepDelta payload``
+and type ``ACK`` (2) carrying ``u64 boot | u64 seq``.  The ``(boot, seq)``
+ride *outside* the (possibly compressed) delta payload so the server acks
+without decoding and the client tracks resends without keeping decoded
+objects alive.
+
+The server acknowledges a DATA frame once it is enqueued in server-process
+memory; ``drain_into`` hands queued payloads to the aggregator on the
+driver thread (the aggregator is not thread-safe and never touched by
+socket threads).  An ack therefore means "durable as long as the
+aggregator process lives" — if the aggregator process dies, its merged
+windows die with the queue, so no stronger durability would be observable.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import socket
+import struct
+import threading
+import time
+import zlib
+from collections import OrderedDict
+
+from .events import StepDelta, WireFormatError
+
+FRAME_DATA = 1
+FRAME_ACK = 2
+
+_FRAME_HEAD = struct.Struct("<IB")
+_BOOT_SEQ = struct.Struct("<QQ")
+
+#: Refuse frames larger than this (a corrupt length prefix must not make
+#: the receiver allocate gigabytes).
+MAX_FRAME_BYTES = 64 << 20
+
+
+class TransportError(RuntimeError):
+    """A transport-layer failure (bad frame, oversized frame, closed peer)."""
+
+
+def parse_address(address) -> tuple[int, object]:
+    """Normalize an address to ``(socket family, sockaddr)``.
+
+    ``("host", port)`` tuples and ``"host:port"`` strings are TCP
+    (``AF_INET``); ``"unix:/path"`` (or a bare path containing ``/``) is a
+    Unix-domain socket (``AF_UNIX``).
+    """
+    if isinstance(address, tuple):
+        host, port = address
+        return socket.AF_INET, (str(host), int(port))
+    if isinstance(address, str):
+        if address.startswith("unix:"):
+            return socket.AF_UNIX, address[len("unix:"):]
+        if ":" in address and not address.startswith("/"):
+            host, _, port = address.rpartition(":")
+            return socket.AF_INET, (host or "127.0.0.1", int(port))
+        if "/" in address:
+            return socket.AF_UNIX, address
+    raise ValueError(f"unparseable transport address {address!r}")
+
+
+def _recv_exact(sock: socket.socket, count: int) -> bytes | None:
+    """Read exactly ``count`` bytes, or None on clean EOF at a frame
+    boundary; raises on mid-frame EOF."""
+    chunks = []
+    got = 0
+    while got < count:
+        chunk = sock.recv(min(count - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                return None
+            raise TransportError(
+                f"peer closed mid-frame ({got}/{count} bytes)"
+            )
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def _read_frame(sock: socket.socket) -> tuple[int, bytes] | None:
+    head = _recv_exact(sock, _FRAME_HEAD.size)
+    if head is None:
+        return None
+    length, ftype = _FRAME_HEAD.unpack(head)
+    if length > MAX_FRAME_BYTES:
+        raise TransportError(f"frame of {length} bytes exceeds MAX_FRAME_BYTES")
+    body = _recv_exact(sock, length) if length else b""
+    if body is None and length:
+        raise TransportError("peer closed before frame body")
+    return ftype, body or b""
+
+
+def _send_frame(sock: socket.socket, ftype: int, body: bytes) -> None:
+    sock.sendall(_FRAME_HEAD.pack(len(body), ftype) + body)
+
+
+class DeltaServer:
+    """Aggregator-side socket endpoint: accept host connections, queue
+    their delta payloads, ack each ``(boot, seq)`` on enqueue.
+
+    Socket work happens on background threads; the aggregator is only
+    touched from whatever thread calls :meth:`drain_into` (one call per
+    diagnosis tick is the intended cadence)::
+
+        server = DeltaServer(("127.0.0.1", 0))     # port 0 = ephemeral
+        addr = server.address                       # advertise to hosts
+        ... each tick ...
+        server.drain_into(aggregator)
+        for cause in aggregator.step(): ...
+
+    ``address`` accepts the forms of :func:`parse_address`.  A Unix-socket
+    path is unlinked on :meth:`close`.
+    """
+
+    def __init__(self, address, *, backlog: int = 16) -> None:
+        self.family, sockaddr = parse_address(address)
+        self._sock = socket.socket(self.family, socket.SOCK_STREAM)
+        if self.family == socket.AF_INET:
+            self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind(sockaddr)
+        self._sock.listen(backlog)
+        self.address = self._sock.getsockname()
+        self._queue: queue.Queue[bytes] = queue.Queue()
+        self._closed = False
+        self._conns: list[socket.socket] = []
+        self._lock = threading.Lock()
+        self.frames_received = 0
+        self.bytes_received = 0
+        self.connections_accepted = 0
+        self.frame_errors = 0
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="DeltaServer.accept", daemon=True
+        )
+        self._accept_thread.start()
+
+    # -- background threads ------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return  # closed
+            with self._lock:
+                if self._closed:
+                    conn.close()
+                    return
+                self._conns.append(conn)
+                self.connections_accepted += 1
+            threading.Thread(
+                target=self._conn_loop, args=(conn,),
+                name="DeltaServer.conn", daemon=True,
+            ).start()
+
+    def _conn_loop(self, conn: socket.socket) -> None:
+        # One reader thread per connection is the only writer of its acks,
+        # so no send lock is needed here.
+        try:
+            while True:
+                frame = _read_frame(conn)
+                if frame is None:
+                    return
+                ftype, body = frame
+                if ftype != FRAME_DATA or len(body) < _BOOT_SEQ.size:
+                    self.frame_errors += 1
+                    return  # protocol violation: drop the connection
+                boot, seq = _BOOT_SEQ.unpack_from(body, 0)
+                payload = body[_BOOT_SEQ.size:]
+                self._queue.put(payload)
+                self.frames_received += 1
+                self.bytes_received += len(payload)
+                _send_frame(conn, FRAME_ACK, _BOOT_SEQ.pack(boot, seq))
+        except (TransportError, OSError):
+            self.frame_errors += 1
+        finally:
+            with self._lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+            conn.close()
+
+    # -- driver-thread surface ---------------------------------------------
+    @property
+    def pending(self) -> int:
+        return self._queue.qsize()
+
+    def drain(self, max_payloads: int | None = None) -> list[bytes]:
+        """Pop queued delta payloads (all of them by default)."""
+        out: list[bytes] = []
+        while max_payloads is None or len(out) < max_payloads:
+            try:
+                out.append(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        return out
+
+    def drain_into(self, aggregator, max_payloads: int | None = None) -> int:
+        """Ingest every queued payload into ``aggregator`` (its
+        ``(boot, seq)`` dedup makes replayed frames free).  A payload that
+        fails wire validation is dropped and counted in ``frame_errors``
+        rather than poisoning the tick.  Returns rows ingested."""
+        rows = 0
+        for payload in self.drain(max_payloads):
+            try:
+                rows += aggregator.ingest(payload)
+            except WireFormatError:
+                self.frame_errors += 1
+        return rows
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            conns = list(self._conns)
+        try:
+            # Wake a thread blocked in accept(); close() alone does not on
+            # every kernel, and a pinned accept keeps the port in LISTEN.
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        self._accept_thread.join(timeout=1.0)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            conn.close()
+        if self.family == socket.AF_UNIX and isinstance(self.address, str):
+            try:
+                os.unlink(self.address)
+            except OSError:
+                pass
+
+    def __enter__(self) -> "DeltaServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class DeltaClient:
+    """Host-side socket endpoint with at-least-once resend.
+
+    :meth:`send` serializes the delta (wire v2 by default), stamps its
+    ``(boot, seq)`` on the frame, appends it to the unacked buffer, and
+    transmits if connected.  A send on a dead connection buffers the frame
+    and triggers a (rate-limited) reconnect attempt; on reconnect the
+    whole unacked tail is replayed in order before new frames — the
+    aggregator's per-incarnation seq watermark drops anything the server
+    already saw.  ``flush()`` blocks until every buffered frame is acked
+    (retrying connects) — call it before process exit so a crash-free run
+    loses nothing.
+
+    The buffer is bounded (``resend_cap`` frames): while the aggregator
+    is unreachable beyond it, the *oldest* frames are shed and counted in
+    ``resend_drops`` — live telemetry prefers losing the stale tail to
+    growing without bound.  Socket sends are bounded too
+    (``send_timeout``, via ``SO_SNDTIMEO`` so the ack reader's recv is
+    untouched): an aggregator that stops draining fills the TCP window
+    and the send fails over to the resend buffer instead of hanging the
+    caller's step loop.
+    """
+
+    def __init__(
+        self,
+        address,
+        *,
+        wire_version: int = 2,
+        resend_cap: int = 1024,
+        connect_timeout: float = 5.0,
+        retry_interval: float = 0.2,
+        send_timeout: float = 5.0,
+    ) -> None:
+        self.family, self.sockaddr = parse_address(address)
+        self.wire_version = int(wire_version)
+        self.resend_cap = int(resend_cap)
+        self.connect_timeout = float(connect_timeout)
+        self.retry_interval = float(retry_interval)
+        self.send_timeout = float(send_timeout)
+        self._sock: socket.socket | None = None
+        self._reader: threading.Thread | None = None
+        self._gen = 0  # bumps per (re)connect so stale readers exit
+        self._lock = threading.Lock()
+        self._acked = threading.Condition(self._lock)
+        self._unacked: OrderedDict[tuple[int, int], bytes] = OrderedDict()
+        self._closed = False
+        self._next_retry = 0.0
+        self.frames_sent = 0
+        self.bytes_sent = 0
+        self.acks_received = 0
+        self.reconnects = 0
+        self.resend_drops = 0
+
+    # -- public surface ----------------------------------------------------
+    @property
+    def unacked(self) -> int:
+        with self._lock:
+            return len(self._unacked)
+
+    def send(self, delta: StepDelta) -> bool:
+        """Buffer + transmit one delta; returns True if it went out on a
+        live connection (False = buffered for resend)."""
+        return self.send_bytes(
+            delta.to_bytes(version=self.wire_version), delta.boot, delta.seq
+        )
+
+    def send_bytes(self, payload: bytes, boot: int, seq: int) -> bool:
+        """Lower-level send for pre-serialized payloads; ``(boot, seq)``
+        must match the payload's header (they key the ack)."""
+        frame = _BOOT_SEQ.pack(boot, seq) + payload
+        with self._lock:
+            if self._closed:
+                raise TransportError("DeltaClient is closed")
+            self._unacked[(boot, seq)] = frame
+            while len(self._unacked) > self.resend_cap:
+                self._unacked.popitem(last=False)
+                self.resend_drops += 1
+            was_connected = self._sock is not None
+            if not self._ensure_connected_locked():
+                return False
+            if not was_connected:
+                # A fresh connection already replayed the whole buffer —
+                # including this frame; sending it again here would just
+                # burn a duplicate on the dedup watermark.
+                return True
+            try:
+                _send_frame(self._sock, FRAME_DATA, frame)
+                self.frames_sent += 1
+                self.bytes_sent += len(payload)
+                return True
+            except OSError:
+                self._disconnect_locked()
+                return False
+
+    def flush(self, timeout: float = 30.0) -> bool:
+        """Block until every buffered frame is acked (reconnecting and
+        replaying as needed).  Returns False on timeout."""
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while self._unacked:
+                if time.monotonic() >= deadline:
+                    return False
+                if self._sock is None:
+                    self._next_retry = 0.0  # flush retries eagerly
+                    if not self._ensure_connected_locked():
+                        self._acked.wait(timeout=self.retry_interval)
+                        continue
+                self._acked.wait(timeout=0.05)
+        return True
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._disconnect_locked()
+
+    def __enter__(self) -> "DeltaClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- internals (all hold self._lock) -----------------------------------
+    def _disconnect_locked(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+        self._gen += 1  # orphan any reader still blocked on the old sock
+
+    def _ensure_connected_locked(self) -> bool:
+        if self._sock is not None:
+            return True
+        now = time.monotonic()
+        if now < self._next_retry:
+            return False
+        self._next_retry = now + self.retry_interval
+        sock = socket.socket(self.family, socket.SOCK_STREAM)
+        sock.settimeout(self.connect_timeout)
+        try:
+            sock.connect(self.sockaddr)
+        except OSError:
+            sock.close()
+            return False
+        sock.settimeout(None)
+        if self.send_timeout > 0:
+            # Bound *sends* only (SO_SNDTIMEO, not settimeout — the ack
+            # reader blocks in recv on this same socket and must not get
+            # spurious timeouts): a stalled aggregator whose TCP window
+            # filled turns into an OSError here, the frame stays in the
+            # bounded resend buffer, and the caller's step loop keeps
+            # moving instead of hanging inside send().
+            try:
+                sec = int(self.send_timeout)
+                usec = int((self.send_timeout - sec) * 1e6)
+                sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDTIMEO,
+                                struct.pack("@ll", sec, usec))
+            except OSError:  # pragma: no cover - platform without the opt
+                pass
+        self._sock = sock
+        self._gen += 1
+        gen = self._gen
+        if self.frames_sent or self.acks_received:
+            self.reconnects += 1
+        # Replay the unacked tail in order on the fresh connection.
+        try:
+            for frame in self._unacked.values():
+                _send_frame(sock, FRAME_DATA, frame)
+                self.frames_sent += 1
+                self.bytes_sent += len(frame) - _BOOT_SEQ.size
+        except OSError:
+            self._disconnect_locked()
+            return False
+        self._reader = threading.Thread(
+            target=self._ack_loop, args=(sock, gen),
+            name="DeltaClient.acks", daemon=True,
+        )
+        self._reader.start()
+        return True
+
+    def _ack_loop(self, sock: socket.socket, gen: int) -> None:
+        try:
+            while True:
+                frame = _read_frame(sock)
+                if frame is None:
+                    break
+                ftype, body = frame
+                if ftype != FRAME_ACK or len(body) != _BOOT_SEQ.size:
+                    break
+                boot, seq = _BOOT_SEQ.unpack(body)
+                with self._lock:
+                    if gen != self._gen:
+                        return  # superseded by a reconnect
+                    # Cumulative prefix ack: the channel is FIFO and the
+                    # server acks every DATA frame, so everything of this
+                    # boot at or before ``seq`` in send order is
+                    # delivered.  A duplicate ack (a replayed frame the
+                    # server acked twice) matches nothing and is a no-op
+                    # — it must never pop newer, still-unacked frames.
+                    while self._unacked:
+                        k = next(iter(self._unacked))
+                        if k[0] != boot or k[1] > seq:
+                            break
+                        self._unacked.popitem(last=False)
+                        self.acks_received += 1
+                    self._acked.notify_all()
+        except (TransportError, OSError):
+            pass
+        with self._lock:
+            if gen == self._gen:
+                self._disconnect_locked()
+                self._acked.notify_all()
+
+
+class ShmRing:
+    """Same-machine SPSC shared-memory ring for framed delta payloads.
+
+    One producer process :meth:`push`\\ es ``u32 length | u32 crc32 |
+    payload`` records; one consumer :meth:`pop`\\ s them.  Head (read) and
+    tail (write) are monotonically increasing u64 byte cursors at offsets
+    0 and 8 of the segment; the data region is ``capacity`` bytes after
+    the 24-byte header, addressed modulo capacity with byte-granular
+    wrap.  A record's bytes are written before the tail cursor is
+    published, and with exactly one writer and one reader no lock is
+    needed.  Pure Python cannot issue memory fences, so on
+    weakly-ordered CPUs a consumer may briefly observe the published
+    tail before the record bytes land: the per-record CRC makes that
+    safe — :meth:`pop` treats a mismatched record as *not yet visible*
+    and returns None (the bytes settle within the store-buffer drain,
+    microseconds), raising :class:`TransportError` only if the same
+    record stays invalid for a full second of retries (real corruption,
+    e.g. a second writer).  ``push`` on a full ring returns False
+    (back-pressure, not blocking) — the producer decides whether to
+    retry or shed.
+
+    Use :meth:`create` on the owning side and :meth:`attach` (by name) in
+    the peer process; the creator :meth:`close`\\ s with ``unlink=True``.
+    The header also records the creator's PID so a *cross-process* attach
+    can detach itself from Python's shared-memory resource tracker (which
+    would otherwise unlink the live segment when the attaching process
+    exits — fixed upstream only in 3.13's ``track=False``), while a
+    same-process attach leaves tracking alone.
+    """
+
+    _HEADER = 32       # u64 head | u64 tail | u64 creator pid | u64 capacity
+    _REC_HEAD = 8      # u32 payload length | u32 crc32(payload)
+    #: Consecutive failed validations of the *same* head position before
+    #: pop() declares the ring corrupt rather than awaiting visibility.
+    _MAX_VISIBILITY_RETRIES = 10_000
+
+    def __init__(self, shm, capacity: int, owner: bool) -> None:
+        self._shm = shm
+        self.capacity = capacity
+        self.owner = owner
+        self.pushes = 0
+        self.pops = 0
+        self.full_rejects = 0
+        self.frame_errors = 0
+        self._retries_at = (-1, 0)  # (head position, failed validations)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def create(cls, capacity: int = 1 << 20, name: str | None = None) -> "ShmRing":
+        from multiprocessing import shared_memory
+
+        shm = shared_memory.SharedMemory(
+            name=name, create=True, size=cls._HEADER + int(capacity)
+        )
+        shm.buf[: cls._HEADER] = bytes(cls._HEADER)  # head = tail = 0
+        struct.pack_into("<QQ", shm.buf, 16, os.getpid(), int(capacity))
+        return cls(shm, int(capacity), owner=True)
+
+    @classmethod
+    def attach(cls, name: str) -> "ShmRing":
+        from multiprocessing import shared_memory
+
+        shm = shared_memory.SharedMemory(name=name, create=False)
+        creator_pid = struct.unpack_from("<Q", shm.buf, 16)[0]
+        if creator_pid != os.getpid():
+            try:  # Python <3.13: stop the resource tracker of an
+                # *attaching* process from unlinking the live segment when
+                # that process exits (the owner unlinks in close()).  A
+                # same-process attach keeps its registration — the owner's
+                # unlink pairs with it.
+                from multiprocessing import resource_tracker
+
+                resource_tracker.unregister(shm._name, "shared_memory")  # noqa: SLF001
+            except Exception:  # pragma: no cover - tracker internals moved
+                pass
+        # The creator's requested capacity, from the header — NOT derived
+        # from shm.size: platforms round segments up to page multiples,
+        # and both ends must wrap modulo the same number.
+        capacity = struct.unpack_from("<Q", shm.buf, 24)[0]
+        if not 0 < capacity <= shm.size - cls._HEADER:
+            raise TransportError(
+                f"shm segment {name!r} header declares capacity {capacity} "
+                f"outside the {shm.size}-byte segment — not a ShmRing?"
+            )
+        return cls(shm, int(capacity), owner=False)
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    # -- cursors -----------------------------------------------------------
+    def _head(self) -> int:
+        return struct.unpack_from("<Q", self._shm.buf, 0)[0]
+
+    def _tail(self) -> int:
+        return struct.unpack_from("<Q", self._shm.buf, 8)[0]
+
+    def _set_head(self, v: int) -> None:
+        struct.pack_into("<Q", self._shm.buf, 0, v)
+
+    def _set_tail(self, v: int) -> None:
+        struct.pack_into("<Q", self._shm.buf, 8, v)
+
+    def _write(self, pos: int, data: bytes) -> None:
+        pos %= self.capacity
+        first = min(len(data), self.capacity - pos)
+        base = self._HEADER
+        self._shm.buf[base + pos : base + pos + first] = data[:first]
+        if first < len(data):
+            self._shm.buf[base : base + len(data) - first] = data[first:]
+
+    def _read(self, pos: int, count: int) -> bytes:
+        pos %= self.capacity
+        base = self._HEADER
+        first = min(count, self.capacity - pos)
+        out = bytes(self._shm.buf[base + pos : base + pos + first])
+        if first < count:
+            out += bytes(self._shm.buf[base : base + count - first])
+        return out
+
+    # -- SPSC operations ---------------------------------------------------
+    def push(self, payload: bytes) -> bool:
+        """Producer side: frame + write ``payload``; False if the ring
+        lacks space (record never partially visible)."""
+        need = self._REC_HEAD + len(payload)
+        if need > self.capacity:
+            raise ValueError(
+                f"payload of {len(payload)} bytes exceeds ring capacity"
+            )
+        head, tail = self._head(), self._tail()
+        if self.capacity - (tail - head) < need:
+            self.full_rejects += 1
+            return False
+        self._write(tail, struct.pack("<II", len(payload),
+                                      zlib.crc32(payload)))
+        self._write(tail + self._REC_HEAD, payload)
+        self._set_tail(tail + need)  # publish
+        self.pushes += 1
+        return True
+
+    def _not_yet_visible(self, head: int) -> None:
+        """A record that fails validation under a published tail is, on a
+        healthy SPSC ring, a store still draining on a weakly-ordered
+        CPU: back off and let the caller retry.  The same head position
+        failing persistently is real corruption."""
+        pos, n = self._retries_at
+        n = n + 1 if pos == head else 1
+        self._retries_at = (head, n)
+        if n > self._MAX_VISIBILITY_RETRIES:
+            raise TransportError(
+                "shm ring corrupt: record at head failed validation "
+                f"{n} times (length/crc never settled)"
+            )
+
+    def pop(self) -> bytes | None:
+        """Consumer side: next payload; None if the ring is empty or the
+        head record's bytes are not yet fully visible (retry later)."""
+        head, tail = self._head(), self._tail()
+        if tail == head:
+            return None
+        length, crc = struct.unpack("<II", self._read(head, self._REC_HEAD))
+        if self._REC_HEAD + length > tail - head:
+            self._not_yet_visible(head)
+            return None
+        payload = self._read(head + self._REC_HEAD, length)
+        if zlib.crc32(payload) != crc:
+            self._not_yet_visible(head)
+            return None
+        self._retries_at = (-1, 0)
+        self._set_head(head + self._REC_HEAD + length)
+        self.pops += 1
+        return payload
+
+    def drain_into(self, aggregator, max_payloads: int | None = None) -> int:
+        """Consumer convenience: pop and ingest until empty.  A payload
+        failing wire validation is dropped and counted in
+        ``frame_errors`` rather than poisoning the tick (the socket
+        server's ``drain_into`` contract)."""
+        rows = 0
+        n = 0
+        while max_payloads is None or n < max_payloads:
+            payload = self.pop()
+            if payload is None:
+                break
+            try:
+                rows += aggregator.ingest(payload)
+            except WireFormatError:
+                self.frame_errors += 1
+            n += 1
+        return rows
+
+    def close(self, unlink: bool | None = None) -> None:
+        if unlink is None:
+            unlink = self.owner
+        self._shm.close()
+        if unlink:
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:
+                pass
+
+    def __enter__(self) -> "ShmRing":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class RingSender:
+    """Adapter giving :class:`ShmRing` the producer-side ``send(delta)``
+    surface of :class:`DeltaClient` (so ``ServeEngine(delta_sink=...)``
+    and the launcher treat socket and ring paths uniformly).  A full ring
+    retries briefly, then sheds the delta (``shed`` counter) — the
+    same-machine consumer draining each tick makes sustained fullness an
+    aggregator stall, which telemetry must survive."""
+
+    def __init__(self, ring: ShmRing, *, wire_version: int = 2,
+                 retry: float = 0.01) -> None:
+        self.ring = ring
+        self.wire_version = int(wire_version)
+        self.retry = float(retry)
+        self.shed = 0
+
+    def send(self, delta: StepDelta) -> bool:
+        payload = delta.to_bytes(version=self.wire_version)
+        if self.ring.push(payload):
+            return True
+        time.sleep(self.retry)
+        if self.ring.push(payload):
+            return True
+        self.shed += 1
+        return False
+
+    def flush(self, timeout: float = 0.0) -> bool:  # symmetry with DeltaClient
+        return True
+
+    def close(self) -> None:
+        self.ring.close(unlink=False)

@@ -14,6 +14,8 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 README = os.path.join(REPO, "README.md")
 ARCH = os.path.join(REPO, "docs", "architecture.md")
+WIRE = os.path.join(REPO, "docs", "wire_format.md")
+OPS = os.path.join(REPO, "docs", "operations.md")
 
 FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 DOTTED = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
@@ -82,13 +84,65 @@ class TestArchitectureDoc:
     def test_exists_with_cross_reference(self):
         text = _read(ARCH)
         for needle in ("Eq. 5", "Eq. 6", "Eq. 7", "cross-reference",
-                       "FleetAggregator"):
+                       "FleetAggregator", "wire_format.md",
+                       "repro.telemetry.transport"):
             assert needle in text
 
     def test_dotted_references_resolve(self):
         missing = [d for d in sorted(set(DOTTED.findall(_read(ARCH))))
                    if not _resolves(d)]
         assert not missing, f"architecture.md references nonexistent: {missing}"
+
+
+class TestWireFormatDoc:
+    """docs/wire_format.md is the *normative* spec: the sections a codec
+    implementer needs must exist, and every dotted name must resolve."""
+
+    def test_exists_with_normative_sections(self):
+        text = _read(WIRE)
+        for needle in ("BRD1", "BRD2", "present", "DEFLATE",
+                       "XOR", "Changed mask", "boot", "seq",
+                       "At-least-once", "WireFormatError",
+                       "DATA", "ACK", "trailing bytes"):
+            assert needle in text, f"wire_format.md lost {needle!r}"
+
+    def test_both_versions_specified(self):
+        text = _read(WIRE)
+        assert "Version 1" in text and "Version 2" in text
+
+    def test_dotted_references_resolve(self):
+        missing = [d for d in sorted(set(DOTTED.findall(_read(WIRE))))
+                   if not _resolves(d)]
+        assert not missing, f"wire_format.md references nonexistent: {missing}"
+
+    def test_cross_referenced(self):
+        assert "wire_format.md" in _read(ARCH)
+        assert "operations.md" in _read(WIRE)
+
+
+class TestOperationsDoc:
+    def test_exists_with_ops_sections(self):
+        text = _read(OPS)
+        for needle in ("lease", "dropout", "severity",
+                       "Re-baselining is deliberate", "BENCH_current.json",
+                       "BENCH_baseline.json", "fleet_demo.py",
+                       "--fleet-listen", "--fleet-connect",
+                       "at-least-once", "duplicate_drops"):
+            assert needle.lower() in text.lower(), (
+                f"operations.md lost {needle!r}"
+            )
+
+    def test_readme_links_here_for_rebaseline(self):
+        """The re-baseline workflow moved here; the README must keep a
+        pointer instead of a divergent copy."""
+        readme = _read(README)
+        assert "docs/operations.md" in readme
+        assert "Re-baselining" in readme
+
+    def test_dotted_references_resolve(self):
+        missing = [d for d in sorted(set(DOTTED.findall(_read(OPS))))
+                   if not _resolves(d)]
+        assert not missing, f"operations.md references nonexistent: {missing}"
 
 
 class TestHelpMatchesDocs:
@@ -103,9 +157,18 @@ class TestHelpMatchesDocs:
         ("repro.core.SlidingStageWindow.merge", ("watermark", "sketch",
                                                  "byte-identical")),
         ("repro.core.BigRootsAnalyzer.analyze_fleet", ("batched", "backend")),
-        ("repro.serve.FleetAggregator", ("StepDelta", "merged", "step")),
+        ("repro.serve.FleetAggregator", ("StepDelta", "merged", "step",
+                                         "lease", "dark")),
         ("repro.telemetry.StepDelta", ("wire", "stage")),
         ("repro.telemetry.StepTelemetry.drain_delta", ("present", "drain")),
+        ("repro.telemetry.StepDelta.to_bytes", ("version", "deflate",
+                                                "stateless")),
+        ("repro.telemetry.StepDelta.from_bytes", ("truncated",
+                                                  "WireFormatError")),
+        ("repro.telemetry.DeltaClient", ("resend", "ack", "reconnect",
+                                         "bounded")),
+        ("repro.telemetry.DeltaServer", ("ack", "drain", "thread")),
+        ("repro.telemetry.ShmRing", ("producer", "consumer", "cursor")),
     ])
     def test_docstring_covers(self, obj_path, needles):
         parts = obj_path.split(".")

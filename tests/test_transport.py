@@ -1,0 +1,609 @@
+"""Cross-process transport + StepDelta v2 codec suite.
+
+Pins the normative behaviors of ``docs/wire_format.md``:
+
+- v2 encode→decode round-trip byte-identity vs the v1 decode of the same
+  delta, on randomized sparse/dense blocks (NaNs, signed zeros, infs,
+  empty stages, empty deltas included);
+- corrupt/truncated frames raise :class:`WireFormatError` — never a
+  numpy reshape error deep in merge;
+- cross-version compatibility (one reader, both magics);
+- the socket channel's at-least-once resend staying safe under the
+  aggregator's ``(boot, seq)`` dedup, including a server restart;
+- the shared-memory ring's SPSC framing incl. wrap-around;
+- host-dropout leases: once-per-outage escalation, mid-incident
+  severity, rejoin accounting, and the fleet-clock watermark advance
+  that keeps silent hosts' stages decaying.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BigRootsAnalyzer, JAX_FEATURES, SPARK_FEATURES
+from repro.serve.fleet import DROPOUT_FEATURE, FleetAggregator
+from repro.telemetry.events import (
+    StageDelta,
+    StepDelta,
+    StepTelemetry,
+    WireFormatError,
+)
+from repro.telemetry.transport import (
+    DeltaClient,
+    DeltaServer,
+    RingSender,
+    ShmRing,
+    TransportError,
+)
+
+
+def random_delta(rng, host="h0", seq=1, boot=7, stages=None, rows=None,
+                 present_p=None) -> StepDelta:
+    """Randomized sparse/dense stage blocks, adversarial values included."""
+    stages = int(rng.integers(0, 4)) if stages is None else stages
+    out = []
+    for si in range(stages):
+        m = int(rng.integers(0, 48)) if rows is None else rows
+        names = list(rng.choice(
+            ["cpu", "disk", "gc_time", "read_bytes", "data_load_time"],
+            size=int(rng.integers(0, 5)), replace=False,
+        ))
+        columns, present = {}, {}
+        for nm in names:
+            vals = rng.normal(0, 1e3, m)
+            # adversarial bit patterns: NaN, +-inf, signed zero, denormal
+            for special in (np.nan, np.inf, -np.inf, -0.0, 5e-324):
+                hit = rng.random(m) < 0.05
+                vals = np.where(hit, special, vals)
+            p = float(rng.choice([0.0, 0.2, 0.8, 1.0])) \
+                if present_p is None else present_p
+            mask = rng.random(m) < p
+            columns[nm] = vals
+            present[nm] = mask
+        starts = rng.uniform(0, 1e6, m)
+        out.append(StageDelta(
+            f"stage{si}", [f"{host}/t{si}-{i}" for i in range(m)],
+            [f"n{int(rng.integers(0, 5))}" for _ in range(m)],
+            starts, starts + rng.uniform(0.1, 10, m),
+            rng.integers(0, 3, m).astype(np.int16), columns, present,
+        ))
+    return StepDelta(host, seq, out, boot=boot)
+
+
+def assert_deltas_equal(a: StepDelta, b: StepDelta) -> None:
+    assert a.host == b.host and a.seq == b.seq and a.boot == b.boot
+    assert len(a.stages) == len(b.stages)
+    for sa, sb in zip(a.stages, b.stages):
+        assert sa.stage_id == sb.stage_id
+        assert sa.task_ids == sb.task_ids and sa.nodes == sb.nodes
+        for field in ("starts", "ends", "locality"):
+            got, want = getattr(sa, field), getattr(sb, field)
+            assert got.tobytes() == want.tobytes(), field  # bit-exact
+        assert set(sa.columns) == set(sb.columns)
+        for nm in sb.columns:
+            assert sa.columns[nm].tobytes() == sb.columns[nm].tobytes(), nm
+            np.testing.assert_array_equal(sa.present[nm], sb.present[nm])
+
+
+class TestWireV2Codec:
+    def test_round_trip_byte_identity_vs_v1(self):
+        """Property: for randomized sparse/dense deltas, decode(v2 bytes)
+        is field-for-field bit-identical to decode(v1 bytes)."""
+        rng = np.random.default_rng(42)
+        for trial in range(30):
+            d = random_delta(rng, seq=trial + 1)
+            via_v1 = StepDelta.from_bytes(d.to_bytes(version=1))
+            via_v2 = StepDelta.from_bytes(d.to_bytes(version=2))
+            assert_deltas_equal(via_v2, via_v1)
+
+    def test_default_version_is_v2(self):
+        d = random_delta(np.random.default_rng(0), stages=1, rows=4)
+        assert d.to_bytes()[:4] == b"BRD2"
+        assert StepDelta.wire_version(d.to_bytes()) == 2
+        assert StepDelta.wire_version(d.to_bytes(version=1)) == 1
+
+    def test_encoding_is_deterministic(self):
+        """Canonicalized masked slots + stateless codec: same logical
+        delta, same bytes."""
+        rng = np.random.default_rng(3)
+        d = random_delta(rng, stages=2, rows=16)
+        assert d.to_bytes() == d.to_bytes()
+        # garbage under the mask must not leak into the payload
+        s = d.stages[0]
+        for nm, mask in s.present.items():
+            s.columns[nm] = np.where(mask, s.columns[nm], 123.456)
+        assert d.to_bytes() == StepDelta(
+            d.host, d.seq, d.stages, boot=d.boot
+        ).to_bytes()
+
+    def test_empty_delta_and_empty_stage(self):
+        for ver in (1, 2):
+            rt = StepDelta.from_bytes(StepDelta("h", 9, []).to_bytes(ver))
+            assert rt.num_rows == 0 and rt.seq == 9
+            empty = StageDelta("s", [], [], np.zeros(0), np.zeros(0),
+                               np.zeros(0, np.int16), {}, {})
+            rt = StepDelta.from_bytes(
+                StepDelta("h", 1, [empty]).to_bytes(ver)
+            )
+            assert rt.stages[0].stage_id == "s" and len(rt.stages[0]) == 0
+
+    def test_near_constant_columns_compress(self):
+        """The premise the format is built on: per-host hot columns are
+        near-constant, so v2 beats v1 by well over 2x on a step stream."""
+        rows = 512
+        rng = np.random.default_rng(1)
+        starts = 1000.0 + np.arange(rows, dtype=np.float64)
+        cols = {
+            "read_bytes": np.full(rows, 64e6),
+            "gc_time": np.zeros(rows),
+            "cpu": np.round(rng.beta(2, 8, rows), 2),
+            "data_load_time": np.abs(rng.normal(0.2, 0.02, rows)),
+        }
+        d = StepDelta("h0", 1, [StageDelta(
+            "s0", [f"h0/step{i:06d}" for i in range(rows)], ["h0"] * rows,
+            starts, starts + 0.9 + rng.normal(0, 0.01, rows),
+            np.zeros(rows, np.int16), cols,
+            {k: np.ones(rows, bool) for k in cols},
+        )])
+        v1, v2 = d.to_bytes(version=1), d.to_bytes(version=2)
+        assert len(v1) > 2 * len(v2), (len(v1), len(v2))
+        assert_deltas_equal(StepDelta.from_bytes(v2),
+                            StepDelta.from_bytes(v1))
+
+    @pytest.mark.parametrize("version", [1, 2])
+    def test_truncation_always_typed_error(self, version):
+        """Any prefix of a valid payload must raise WireFormatError —
+        the satellite fix: a short read can never surface as a numpy
+        reshape failure inside merge."""
+        rng = np.random.default_rng(5)
+        buf = random_delta(rng, stages=2, rows=20).to_bytes(version=version)
+        step = max(1, len(buf) // 199)
+        for cut in range(0, len(buf), step):
+            with pytest.raises(WireFormatError):
+                StepDelta.from_bytes(buf[:cut])
+
+    @pytest.mark.parametrize("version", [1, 2])
+    def test_trailing_bytes_rejected(self, version):
+        buf = random_delta(np.random.default_rng(6), stages=1,
+                           rows=8).to_bytes(version=version)
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(buf + b"\x00")
+
+    def test_bad_magic_and_garbage(self):
+        d = StepDelta("h", 1, []).to_bytes()
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(b"NOPE" + d[4:])
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(b"")
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(os.urandom(64))
+        # WireFormatError subclasses ValueError (pre-existing callers)
+        assert issubclass(WireFormatError, ValueError)
+
+    def test_corrupt_compression_stream(self):
+        buf = bytearray(random_delta(np.random.default_rng(7), stages=1,
+                                     rows=16).to_bytes())
+        buf[10] ^= 0xFF
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(bytes(buf))
+
+    def test_header_length_lies_rejected(self):
+        """Header-declared lengths are validated against actual buffers:
+        a header claiming more rows than the payload carries must raise,
+        for both versions."""
+        import json
+        import struct
+        import zlib
+
+        d = random_delta(np.random.default_rng(8), stages=1, rows=8)
+
+        def tamper(buf, version):
+            if version == 1:
+                (hlen,) = struct.unpack_from("<I", buf, 4)
+                head = json.loads(buf[8:8 + hlen].decode())
+                head["stages"][0]["n"] = 9999
+                head["stages"][0]["task_ids"] = ["t"] * 9999
+                head["stages"][0]["nodes"] = ["n"] * 9999
+                new = json.dumps(head, separators=(",", ":")).encode()
+                return buf[:4] + struct.pack("<I", len(new)) + new \
+                    + buf[8 + hlen:]
+            body = zlib.decompress(buf[8:])
+            (hlen,) = struct.unpack_from("<I", body, 0)
+            head = json.loads(body[4:4 + hlen].decode())
+            head["stages"][0]["n"] = 9999
+            head["stages"][0]["task_ids"] = ["t"] * 9999
+            head["stages"][0]["nodes"] = ["n"] * 9999
+            new = json.dumps(head, separators=(",", ":")).encode()
+            nb = struct.pack("<I", len(new)) + new + body[4 + hlen:]
+            return b"BRD2" + struct.pack("<I", len(nb)) + zlib.compress(nb)
+
+        for version in (1, 2):
+            with pytest.raises(WireFormatError):
+                StepDelta.from_bytes(tamper(d.to_bytes(version=version),
+                                            version))
+
+    def test_missing_stage_id_and_bad_seq_are_typed(self):
+        """Structural header lies beyond lengths — a stage without
+        stage_id, a non-numeric seq — must also raise WireFormatError,
+        not KeyError/TypeError out of the decode loop."""
+        import json
+        import struct
+        import zlib
+
+        d = random_delta(np.random.default_rng(13), stages=1, rows=4)
+        buf = d.to_bytes()
+        body = zlib.decompress(buf[8:])
+        (hlen,) = struct.unpack_from("<I", body, 0)
+        head = json.loads(body[4:4 + hlen].decode())
+
+        def rebuild(h):
+            nb = json.dumps(h, separators=(",", ":")).encode()
+            nbody = struct.pack("<I", len(nb)) + nb + body[4 + hlen:]
+            return b"BRD2" + struct.pack("<I", len(nbody)) \
+                + zlib.compress(nbody)
+
+        broken = dict(head)
+        broken["stages"] = [dict(head["stages"][0])]
+        del broken["stages"][0]["stage_id"]
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(rebuild(broken))
+        broken = dict(head)
+        broken["seq"] = "not-a-number"
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(rebuild(broken))
+        broken = dict(head)
+        broken["host"] = ["not", "a", "string"]
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(rebuild(broken))
+        for field, bad in (("task_ids", 0), ("nodes", "nope"),
+                           ("columns", [["x"]])):
+            broken = dict(head)
+            broken["stages"] = [dict(head["stages"][0])]
+            broken["stages"][0][field] = bad
+            with pytest.raises(WireFormatError):
+                StepDelta.from_bytes(rebuild(broken))
+
+    def test_decompression_is_bounded_by_declared_length(self):
+        """A frame whose declared body length understates the stream must
+        fail after at most length+1 decompressed bytes — a small
+        high-ratio DEFLATE frame cannot balloon memory."""
+        import struct
+        import zlib
+
+        buf = random_delta(np.random.default_rng(14), stages=2,
+                           rows=32).to_bytes()
+        (length,) = struct.unpack_from("<I", buf, 4)
+        lying = b"BRD2" + struct.pack("<I", 8) + buf[8:]  # claims 8 bytes
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(lying)
+        absurd = b"BRD2" + struct.pack("<I", 0xFFFFFFFF) \
+            + zlib.compress(b"\x00" * 1024)
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(absurd)
+
+    def test_declared_vs_actual_row_count_mismatch(self):
+        import json
+        import struct
+
+        d = random_delta(np.random.default_rng(9), stages=1, rows=8)
+        buf = d.to_bytes(version=1)
+        (hlen,) = struct.unpack_from("<I", buf, 4)
+        head = json.loads(buf[8:8 + hlen].decode())
+        head["stages"][0]["n"] = 4  # lies: buffers carry 8 rows
+        new = json.dumps(head, separators=(",", ":")).encode()
+        with pytest.raises(WireFormatError):
+            StepDelta.from_bytes(
+                buf[:4] + struct.pack("<I", len(new)) + new + buf[8 + hlen:]
+            )
+
+    def test_cross_version_reader(self):
+        """One reader, both magics: a v2-era consumer ingests v1 payloads
+        (old producers / archived captures) transparently — including
+        through the aggregator."""
+        rng = np.random.default_rng(11)
+        d = random_delta(rng, stages=2, rows=12, present_p=0.5)
+        agg_v1 = FleetAggregator(JAX_FEATURES,
+                                 BigRootsAnalyzer(JAX_FEATURES))
+        agg_v2 = FleetAggregator(JAX_FEATURES,
+                                 BigRootsAnalyzer(JAX_FEATURES))
+        assert agg_v1.ingest(d.to_bytes(version=1)) == \
+            agg_v2.ingest(d.to_bytes(version=2))
+        assert agg_v1.store.num_tasks == agg_v2.store.num_tasks
+
+    def test_drain_delta_round_trips_v2(self):
+        """The producer path end to end: StepTelemetry wire rows → v2
+        bytes → decode → identical present-mask semantics."""
+        clock = iter(np.arange(0.0, 100.0, 0.25)).__next__
+        telem = StepTelemetry("hw", window=4, clock=clock, wire=True,
+                              schema=SPARK_FEATURES)
+        with telem.step(0) as s:
+            s.add("gc_time", 0.25)
+        with telem.step(1) as s:
+            s.add("read_bytes", 2e6)
+        d = telem.drain_delta()
+        rt = StepDelta.from_bytes(d.to_bytes())
+        assert_deltas_equal(rt, StepDelta.from_bytes(d.to_bytes(version=1)))
+        sd = rt.stages[0]
+        assert bool(sd.present["gc_time"][0]) is True
+        assert bool(sd.present["gc_time"][1]) is False
+
+
+def make_delta(host, seq, t, boot=1, n=8, cpu=0.2):
+    return StepDelta(host, seq, [StageDelta(
+        "s0", [f"{host}/t{seq}-{i}" for i in range(n)], [host] * n,
+        np.full(n, float(t)), np.full(n, float(t) + 1.0),
+        np.zeros(n, np.int16),
+        {"cpu": np.full(n, cpu)}, {"cpu": np.ones(n, bool)})], boot=boot)
+
+
+class TestDeltaSocket:
+    def test_send_ack_drain(self):
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+        with DeltaServer(("127.0.0.1", 0)) as server:
+            with DeltaClient(server.address) as client:
+                for s in range(5):
+                    client.send(make_delta("h0", s + 1, s))
+                assert client.flush(10.0)
+                assert client.unacked == 0
+            assert server.drain_into(agg) == 40
+        assert agg.duplicate_drops == 0 and agg.num_hosts == 1
+
+    def test_server_restart_resend_dedup(self):
+        """Kill the server mid-stream: the client buffers, reconnects to
+        the reborn server, replays the unacked tail — and the
+        aggregator's (boot, seq) watermark keeps the row stream exact."""
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+        server = DeltaServer(("127.0.0.1", 0))
+        addr = server.address
+        client = DeltaClient(addr, retry_interval=0.05)
+        for s in range(3):
+            client.send(make_delta("h0", s + 1, s))
+        assert client.flush(10.0)
+        agg_rows = server.drain_into(agg)
+        server.close()
+
+        for s in range(3, 6):  # buffered while down
+            client.send(make_delta("h0", s + 1, s))
+        assert client.unacked == 3
+        server = DeltaServer(addr)
+        assert client.flush(10.0)
+        agg_rows += server.drain_into(agg)
+        assert agg_rows == 48 and agg.duplicate_drops == 0
+
+        # an explicit redelivery is dropped whole downstream
+        client.send(make_delta("h0", 6, 5))
+        assert client.flush(10.0)
+        assert server.drain_into(agg) == 0 and agg.duplicate_drops == 1
+        assert client.reconnects >= 1
+        client.close()
+        server.close()
+
+    def test_unix_socket_lifecycle(self, tmp_path):
+        path = str(tmp_path / "agg.sock")
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+        with DeltaServer("unix:" + path) as server:
+            with DeltaClient("unix:" + path) as client:
+                client.send(make_delta("h1", 1, 0))
+                assert client.flush(10.0)
+            assert server.drain_into(agg) == 8
+        assert not os.path.exists(path)
+
+    def test_resend_buffer_bounded(self):
+        client = DeltaClient(("127.0.0.1", 1), resend_cap=4,
+                             connect_timeout=0.05, retry_interval=60.0)
+        for s in range(10):  # nothing listening on port 1
+            assert client.send(make_delta("h0", s + 1, s)) is False
+        assert client.unacked == 4 and client.resend_drops == 6
+        client.close()
+
+    def test_corrupt_payload_dropped_not_poisoning(self):
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+        with DeltaServer(("127.0.0.1", 0)) as server:
+            with DeltaClient(server.address) as client:
+                client.send_bytes(b"GARBAGE-NOT-A-DELTA", boot=1, seq=1)
+                client.send(make_delta("h0", 2, 0))
+                assert client.flush(10.0)
+            assert server.drain_into(agg) == 8  # good delta survives
+            assert server.frame_errors == 1
+
+
+class TestShmRing:
+    def test_round_trip_and_wraparound(self):
+        """200 variable-size records through a 256-byte ring: every byte
+        crosses the wrap boundary many times, and FIFO order plus
+        exactly-once delivery hold throughout."""
+        with ShmRing.create(capacity=256) as ring:
+            peer = ShmRing.attach(ring.name)
+            rng = np.random.default_rng(0)
+            expect, popped = [], []
+            for _ in range(200):
+                payload = rng.bytes(int(rng.integers(1, 90)))
+                while not peer.push(payload):
+                    p = ring.pop()
+                    assert p is not None  # full ring implies poppable data
+                    popped.append(p)
+                expect.append(payload)
+            while (p := ring.pop()) is not None:
+                popped.append(p)
+            assert popped == expect
+            assert peer.full_rejects > 0  # the wrap path really ran
+            peer.close()
+
+    def test_fifo_exact(self):
+        with ShmRing.create(capacity=1 << 12) as ring:
+            payloads = [bytes([i]) * (i + 1) for i in range(20)]
+            for p in payloads:
+                assert ring.push(p)
+            out = []
+            while (p := ring.pop()) is not None:
+                out.append(p)
+            assert out == payloads
+
+    def test_full_ring_rejects_oversize_raises(self):
+        with ShmRing.create(capacity=64) as ring:
+            assert ring.push(b"x" * 40)
+            assert not ring.push(b"y" * 40)   # no room: reject, not block
+            assert ring.full_rejects == 1
+            with pytest.raises(ValueError):
+                ring.push(b"z" * 100)          # can never fit
+            assert ring.pop() == b"x" * 40
+            assert ring.pop() is None
+
+    def test_drain_into_aggregator_with_dedup(self):
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+        with ShmRing.create(capacity=1 << 16) as ring:
+            sender = RingSender(ShmRing.attach(ring.name))
+            sender.send(make_delta("h0", 1, 0))
+            sender.send(make_delta("h0", 2, 1))
+            sender.send(make_delta("h0", 2, 1))  # producer retry duplicate
+            assert ring.drain_into(agg) == 16
+            assert agg.duplicate_drops == 1
+            sender.close()
+
+    def test_drain_into_contains_corrupt_payload(self):
+        """The ring's drain matches the socket server's contract: one
+        invalid payload is counted, the rest of the tick survives."""
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+        with ShmRing.create(capacity=1 << 16) as ring:
+            ring.push(b"NOT-A-DELTA")
+            ring.push(make_delta("h0", 1, 0).to_bytes())
+            assert ring.drain_into(agg) == 8
+            assert ring.frame_errors == 1
+
+    def test_torn_record_awaits_visibility_then_raises(self):
+        """A record whose CRC never validates is first treated as a
+        not-yet-visible store (pop → None), then declared corrupt after
+        the retry budget — a real second-writer bug cannot spin forever."""
+        with ShmRing.create(capacity=1 << 10) as ring:
+            ring.push(b"hello world")
+            # corrupt the payload in place, behind the published tail
+            base = ring._HEADER + ring._REC_HEAD
+            ring._shm.buf[base] ^= 0xFF
+            assert ring.pop() is None       # awaiting visibility
+            with pytest.raises(TransportError):
+                for _ in range(ring._MAX_VISIBILITY_RETRIES + 1):
+                    assert ring.pop() is None
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class TestHostDropout:
+    def _agg(self, **kw):
+        clock = FakeClock()
+        kw.setdefault("lease", 5.0)
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES),
+                              clock=clock, **kw)
+        return agg, clock
+
+    def test_dropout_emitted_once_and_rejoin(self):
+        agg, clock = self._agg()
+        for step in range(3):
+            clock.t = float(step)
+            agg.ingest(make_delta("h0", step + 1, step))
+            agg.ingest(make_delta("h1", step + 1, step))
+            agg.step()
+        assert agg.num_live_hosts == 2
+        drops = []
+        for step in range(3, 14):
+            clock.t = float(step)
+            agg.ingest(make_delta("h0", step + 1, step))
+            drops += [c for c in agg.step()
+                      if c.feature == DROPOUT_FEATURE]
+        assert len(drops) == 1 and agg.host_dropouts == 1
+        cause = drops[0]
+        assert cause.node == "h1" and cause.severity == 1
+        assert cause.value > 5.0 and "h1" in cause.guidance
+        assert agg.num_live_hosts == 1
+        # rejoin: silent accounting, dedup watermarks intact
+        agg.ingest(make_delta("h1", 2, 20))   # an old redelivery...
+        assert agg.duplicate_drops == 1       # ...still dedups
+        agg.ingest(make_delta("h1", 99, 20))
+        assert agg.host_rejoins == 1 and agg.num_live_hosts == 2
+
+    def test_mid_incident_dropout_escalates(self):
+        """A host that goes dark while its nodes carry confirmed causes
+        is a sev-2 finding: incident and telemetry vanished together."""
+        agg, clock = self._agg(decay_steps=64)
+
+        def straggler_delta(seq):
+            n = 16
+            durs = np.ones(n)
+            durs[:2] = 2.5
+            cpu = np.full(n, 0.2)
+            cpu[:2] = 0.95
+            return StepDelta("h1", seq, [StageDelta(
+                "s0", [f"h1/t{seq}-{i}" for i in range(n)], ["h1"] * n,
+                np.zeros(n), durs, np.zeros(n, np.int16),
+                {"cpu": cpu}, {"cpu": np.ones(n, bool)})], boot=1)
+
+        agg.ingest(make_delta("h0", 1, 0, n=16))
+        agg.ingest(straggler_delta(1))
+        causes = agg.step()
+        assert any(c.feature == "cpu" and c.node == "h1" for c in causes)
+        clock.t = 100.0
+        agg.ingest(make_delta("h0", 2, 1, n=16))
+        drops = [c for c in agg.step() if c.feature == DROPOUT_FEATURE]
+        assert len(drops) == 1 and drops[0].severity == 2
+        assert "vanished together" in drops[0].guidance
+
+    def test_fleet_clock_advances_silent_stages(self):
+        """A stage whose hosts all went dark keeps decaying: step()
+        advances every spanned window to the fleet clock, so the silent
+        stage's rows retire as other stages move on."""
+        agg, clock = self._agg(span=10.0, lease=None)
+        agg.ingest(StepDelta("h0", 1, [StageDelta(
+            "sA", [f"h0/a{i}" for i in range(4)], ["h0"] * 4,
+            np.zeros(4), np.full(4, 1.0), np.zeros(4, np.int16), {}, {})],
+            boot=1))
+        wa = agg.store.window("sA")
+        assert wa.live_count == 4
+        # h1 keeps reporting into a different stage, far in the future
+        agg.ingest(StepDelta("h1", 1, [StageDelta(
+            "sB", [f"h1/b{i}" for i in range(4)], ["h1"] * 4,
+            np.full(4, 99.0), np.full(4, 100.0), np.zeros(4, np.int16),
+            {}, {})], boot=1))
+        agg.step()
+        assert wa.live_count == 0          # sA decayed past the span
+        assert agg.store.window("sB").live_count == 4
+        assert wa.watermark == pytest.approx(90.0)
+
+    def test_lease_none_disables(self):
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+        agg.ingest(make_delta("h0", 1, 0))
+        for _ in range(3):
+            assert not [c for c in agg.step()
+                        if c.feature == DROPOUT_FEATURE]
+        assert agg.host_dropouts == 0
+
+
+class TestTransportErrors:
+    def test_parse_address_forms(self):
+        import socket as socket_mod
+
+        from repro.telemetry.transport import parse_address
+
+        assert parse_address(("127.0.0.1", 80)) == \
+            (socket_mod.AF_INET, ("127.0.0.1", 80))
+        assert parse_address("127.0.0.1:80") == \
+            (socket_mod.AF_INET, ("127.0.0.1", 80))
+        assert parse_address("unix:/tmp/x.sock") == \
+            (socket_mod.AF_UNIX, "/tmp/x.sock")
+        assert parse_address("/tmp/x.sock") == \
+            (socket_mod.AF_UNIX, "/tmp/x.sock")
+        with pytest.raises(ValueError):
+            parse_address("nonsense")
+
+    def test_closed_client_raises(self):
+        client = DeltaClient(("127.0.0.1", 1), connect_timeout=0.05)
+        client.close()
+        with pytest.raises(TransportError):
+            client.send(make_delta("h0", 1, 0))
