@@ -43,6 +43,7 @@ BENCHES = {
     "fleet_gates": scale_bench.fleet_gates,
     "fleet_merge": scale_bench.fleet_merge,
     "wire_transport": scale_bench.wire_transport,
+    "policy_eval": scale_bench.policy_eval,
     "kernels": scale_bench.kernel_bench,
     "e2e_train": scale_bench.e2e_train_bench,
 }
@@ -111,7 +112,7 @@ def main() -> None:
         wanted = argv
     elif check:
         wanted = ["analyzer_scale", "streaming_scale", "fleet_gates",
-                  "fleet_merge", "wire_transport"]
+                  "fleet_merge", "wire_transport", "policy_eval"]
     else:
         wanted = list(BENCHES)
 

@@ -1,19 +1,27 @@
-"""Anomaly generation: real resource hogs (paper §IV-A AGs) + the
-deterministic simulated cluster used to replicate the paper's tables.
+"""Anomaly generation: real resource hogs (paper §IV-A AGs), the
+deterministic simulated cluster used to replicate the paper's tables, and
+the closed-loop mitigation A/B harness over it.
 """
 from .generators import CpuAnomalyGenerator, IoAnomalyGenerator, NetworkAnomalyGenerator
 from .injector import Injection, InjectionSchedule, overlap
+from .loop import ABResult, ClosedLoopSim, LoopResult, SCENARIOS, SimActuator, ab_compare
 from .sim import SimCluster, SimResult, WorkloadProfile, WORKLOAD_PROFILES
 
 __all__ = [
+    "ABResult",
+    "ClosedLoopSim",
     "CpuAnomalyGenerator",
     "Injection",
     "InjectionSchedule",
     "IoAnomalyGenerator",
+    "LoopResult",
     "NetworkAnomalyGenerator",
+    "SCENARIOS",
+    "SimActuator",
     "SimCluster",
     "SimResult",
     "WORKLOAD_PROFILES",
     "WorkloadProfile",
+    "ab_compare",
     "overlap",
 ]

@@ -17,7 +17,7 @@ findings into concrete actions on this framework's knobs:
 from __future__ import annotations
 
 import enum
-from collections import Counter
+from collections import Counter, deque
 from dataclasses import dataclass, field
 
 from ..core.analyzer import RootCause
@@ -63,12 +63,22 @@ class Mitigation:
 
 @dataclass
 class MitigationPlanner:
-    """Aggregate findings over a window; recommend actions above thresholds."""
+    """Aggregate findings over a window; recommend actions above thresholds.
+
+    ``applied`` remembers the most recent ``applied_cap`` recommendations
+    as a ring buffer: an always-on loop calling :meth:`plan` every step
+    must not grow it forever (the same leak class
+    ``RootCauseStream.seen`` had before it was bounded).  Pass
+    ``applied_cap=None`` to restore the unbounded legacy behavior."""
 
     quarantine_threshold: int = 3    # distinct contention findings on a host
     skew_threshold: int = 2
     min_findings: int = 1
-    applied: list[Mitigation] = field(default_factory=list)
+    applied_cap: int | None = 256
+    applied: deque[Mitigation] = field(init=False)
+
+    def __post_init__(self) -> None:
+        self.applied = deque(maxlen=self.applied_cap)
 
     def plan(self, causes: list[RootCause]) -> list[Mitigation]:
         per_host_contention: Counter[str] = Counter()

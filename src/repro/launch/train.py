@@ -45,7 +45,9 @@ from ..core import (
     summarize,
 )
 from ..data.pipeline import DataConfig, HostDataLoader, Prefetcher
+from ..ft.elastic import reshard_plan
 from ..ft.mitigation import MitigationPlanner
+from ..ft.policy import ActionKind, DEFAULT_RULES, PolicyEngine, load_policy
 from ..models import Model, smoke_variant
 from ..serve.fleet import FleetAggregator
 from ..telemetry.events import GcTimer, StepTelemetry
@@ -90,6 +92,21 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="seconds without a delta before a connected host "
                          "is declared dark and a dropout cause is "
                          "escalated (only meaningful with --fleet-listen)")
+    ap.add_argument("--mitigate", action="store_true",
+                    help="close the loop: run the guarded policy engine "
+                         "(ft.policy) over every live-diagnosis tick and "
+                         "act on confirmed causes through this process's "
+                         "knobs")
+    ap.add_argument("--mitigate-dry-run", action="store_true",
+                    help="run the policy engine's full decision path and "
+                         "audit log without touching any knob (implies "
+                         "--mitigate)")
+    ap.add_argument("--policy", default="",
+                    help="JSON policy file (ft.policy.load_policy format); "
+                         "default: the built-in DEFAULT_RULES")
+    ap.add_argument("--audit-log", default="",
+                    help="append-only JSONL audit log of every policy "
+                         "decision, including suppressed ones")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--async-ckpt", action="store_true")
@@ -105,6 +122,82 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--host", default="host0")
     return ap
+
+
+class TrainActuator:
+    """Launcher-side :class:`~repro.ft.policy.Actuator`: maps policy
+    actions onto this process's real knobs.
+
+    - ``SAMPLER_BACKOFF`` stretches the /proc sampler's interval (halves
+      its overhead under gc/contention churn); rollback restores it.
+    - ``ASYNC_CKPT`` flips subsequent checkpoint saves to non-blocking.
+    - ``CORDON_HOST`` computes an :func:`~repro.ft.elastic.reshard_plan`
+      over the fleet roster minus the cordoned host — the re-mesh a
+      multi-host launcher would execute (here: printed + recorded).
+    - ``PAGE_OPERATOR`` prints the page and records it.
+
+    Knobs with no in-process surface (prefetch depth is fixed at loader
+    construction) return ``False`` so the audit log records
+    ``actuator_noop`` instead of a silently faked success."""
+
+    def __init__(self, sampler, fleet=None, *,
+                 chips_per_host: int = 8, model_axis: int = 1) -> None:
+        self.sampler = sampler
+        self.fleet = fleet
+        self.chips_per_host = chips_per_host
+        self.model_axis = model_axis
+        self.async_ckpt: bool | None = None    # None = knob untouched
+        self.pages: list[str] = []
+        self.reshard_plans: list = []
+        self._interval0 = sampler.interval if sampler is not None else None
+
+    def apply(self, action) -> bool:
+        kind = action.kind
+        if kind is ActionKind.SAMPLER_BACKOFF and self.sampler is not None:
+            self.sampler.interval = min(self.sampler.interval * 2.0, 5.0)
+            return True
+        if kind is ActionKind.ASYNC_CKPT:
+            self.async_ckpt = True
+            return True
+        if kind is ActionKind.PAGE_OPERATOR:
+            page = action.detail or action.cause_key
+            self.pages.append(page)
+            print(f"[policy] PAGE OPERATOR: {page}")
+            return True
+        if kind is ActionKind.CORDON_HOST and self.fleet is not None:
+            roster = sorted(self.fleet.host_seq)
+            alive = [h for h in roster
+                     if h != action.target
+                     and h not in self.fleet.dropped_hosts]
+            if not alive:
+                return False
+            try:
+                plan = reshard_plan(
+                    (len(roster) * self.chips_per_host // self.model_axis,
+                     self.model_axis),
+                    alive, roster, self.chips_per_host,
+                    model_axis=self.model_axis,
+                )
+            except ValueError:
+                return False    # below one data row: refuse, audit shows it
+            self.reshard_plans.append(plan)
+            print(f"[policy] cordon {action.target}: re-mesh "
+                  f"{plan.old_shape} -> {plan.new_shape} "
+                  f"({plan.chips_idle} chips idle)")
+            return True
+        if kind is ActionKind.UNCORDON_HOST:
+            return True    # roster-only: next reshard plan includes it again
+        return False
+
+    def rollback(self, action) -> bool:
+        kind = action.kind
+        if kind is ActionKind.SAMPLER_BACKOFF and self.sampler is not None:
+            self.sampler.interval = self._interval0
+            return True
+        if kind is ActionKind.ASYNC_CKPT:
+            self.async_ckpt = None
+            return True
+        return False
 
 
 def run(args) -> dict:
@@ -176,6 +269,23 @@ def run(args) -> dict:
                 print(f"[fleet] aggregating at {fleet_server.address}")
     live_causes: list[dict] = []
 
+    # Closed-loop mitigation: policy engine ticked by the fleet aggregator
+    # every diagnosis step (see ft.policy).  Only meaningful where the
+    # causes are — the aggregator role; a --fleet-connect host ships raw
+    # deltas and diagnoses nothing locally.
+    policy = None
+    actuator = None
+    dry_run = getattr(args, "mitigate_dry_run", False)
+    if (getattr(args, "mitigate", False) or dry_run) and fleet is not None:
+        policy_path = getattr(args, "policy", "")
+        rules = load_policy(policy_path) if policy_path else DEFAULT_RULES
+        actuator = TrainActuator(sampler, fleet=fleet)
+        policy = PolicyEngine(
+            rules, actuator, dry_run=dry_run,
+            audit_path=(getattr(args, "audit_log", "") or None),
+        )
+        fleet.policy = policy
+
     ckpt = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
 
     # live anomaly schedule (ground truth for the verification accounting)
@@ -198,6 +308,7 @@ def run(args) -> dict:
                 )
                 generator = None
 
+            t_step0 = time.time()
             with telem.step(step) as scope:
                 with scope.phase("data_load"):
                     batch_np, meta = prefetch.next()
@@ -209,9 +320,14 @@ def run(args) -> dict:
                     state, metrics = train_step(state, batch)
                     loss = float(metrics["loss"])
                 if ckpt and step > 0 and step % args.ckpt_every == 0:
+                    # The policy's ASYNC_CKPT action flips saves to
+                    # non-blocking mid-run (rollback restores the flag).
+                    go_async = args.async_ckpt or (
+                        actuator is not None and bool(actuator.async_ckpt)
+                    )
                     with scope.phase("ckpt"):
                         ckpt.save(step, state["params"],
-                                  blocking=not args.async_ckpt)
+                                  blocking=not go_async)
             losses.append(loss)
             if fleet_client is not None:
                 fleet_client.send(telem.drain_delta())
@@ -219,7 +335,7 @@ def run(args) -> dict:
                 if fleet_server is not None:
                     fleet_server.drain_into(fleet)
                 fleet.ingest_host(telem)
-                for cause in fleet.step():
+                for cause in fleet.step(step_time=time.time() - t_step0):
                     live_causes.append({
                         "step": step, "task": cause.task_id,
                         "feature": cause.feature, "value": cause.value,
@@ -263,6 +379,8 @@ def run(args) -> dict:
                 "feature": cause.feature, "value": cause.value,
             })
         fleet_server.close()
+    if policy is not None:
+        policy.close()
 
     # ---- offline BigRoots analysis ---------------------------------------
     trace = telem.trace
@@ -300,6 +418,20 @@ def run(args) -> dict:
             {"action": m.action.value, "target": m.target, "evidence": m.evidence}
             for m in plan
         ],
+        "policy": (
+            None if policy is None else {
+                **policy.stats(),
+                "dry_run": policy.dry_run,
+                "pages": list(actuator.pages),
+                "reshard_plans": [
+                    {"old_shape": list(p.old_shape),
+                     "new_shape": list(p.new_shape),
+                     "dropped_hosts": list(p.dropped_hosts),
+                     "chips_idle": p.chips_idle}
+                    for p in actuator.reshard_plans
+                ],
+            }
+        ),
         "injection": {
             "kind": args.anomaly,
             "truth_pairs": len(truth & universe),

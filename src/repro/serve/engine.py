@@ -28,6 +28,13 @@ of ``fleet``: any object with ``send(delta)`` —
 :class:`~repro.telemetry.transport.RingSender` (same-machine shared-memory
 ring).  The engine then only ships its per-step delta; the aggregator
 process drives the sweep and owns the causes.
+
+With a ``policy`` (:class:`~repro.ft.policy.PolicyEngine`), diagnosis
+closes the loop: every step's newly confirmed causes are evaluated
+against the policy's rules and acted on through its actuator, with the
+measured decode-step time feeding the engine's rollback verifier.  The
+policy ticks every step — idle steps advance cooldowns and rollback
+watches.
 """
 from __future__ import annotations
 
@@ -95,6 +102,7 @@ class ServeEngine:
         fleet: FleetAggregator | None = None,
         fleet_step: bool = True,
         delta_sink=None,
+        policy=None,
     ) -> None:
         self.model = model
         self.params = params
@@ -112,6 +120,7 @@ class ServeEngine:
         self.fleet = fleet
         self.fleet_step = fleet_step
         self.delta_sink = delta_sink
+        self.policy = policy
         self.live_root_causes: list = []
         if fleet is not None and delta_sink is not None:
             raise ValueError(
@@ -164,19 +173,29 @@ class ServeEngine:
         max_new = max(r.max_new_tokens for r in requests)
         for step in range(max_new):
             if self.telemetry is not None:
+                step_t0 = time.time()
                 with self.telemetry.step(step_offset + step) as scope:
                     with scope.phase("compute"):
                         nxt, cache = self._decode_once(nxt, cache)
                         jax.block_until_ready(nxt)
                     scope.add("read_bytes", float(nxt.size * 4))
+                fresh: list = []
                 if self.fleet is not None:
                     self.fleet.ingest_host(self.telemetry)
                     if self.fleet_step:
-                        self.live_root_causes.extend(self.fleet.step())
+                        fresh = self.fleet.step()
                 elif self.delta_sink is not None:
                     self.delta_sink.send(self.telemetry.drain_delta())
                 elif self.diagnosis is not None:
-                    self.live_root_causes.extend(self.diagnosis.step())
+                    fresh = self.diagnosis.step()
+                self.live_root_causes.extend(fresh)
+                if self.policy is not None:
+                    self.policy.step(
+                        fresh,
+                        step_time=time.time() - step_t0,
+                        live_hosts=(self.fleet.num_live_hosts
+                                    if self.fleet is not None else None),
+                    )
             else:
                 nxt, cache = self._decode_once(nxt, cache)
             out = np.asarray(nxt[:, 0])

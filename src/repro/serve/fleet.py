@@ -90,6 +90,13 @@ class FleetAggregator:
         (``host_rejoins``) — its ``(boot, seq)`` watermarks were kept, so
         redelivered deltas still dedup.  ``lease=None`` (default)
         disables dropout tracking.
+    policy:
+        Optional :class:`~repro.ft.policy.PolicyEngine` closing the loop:
+        every :meth:`step`'s causes are handed to it with the current
+        live-host count (so its min-fleet guardrail tracks dropouts), and
+        a host that rejoins after a dropout is reported via
+        ``note_rejoin`` so the policy's flap damping sees the
+        cordon→rejoin→cordon cycle.
 
     Silent hosts must not freeze retention: every :meth:`step` also
     advances each time-spanned stage window's watermark to the *fleet*
@@ -136,6 +143,7 @@ class FleetAggregator:
         max_stages: int | None = 64,
         lease: float | None = None,
         clock=time.time,
+        policy=None,
     ) -> None:
         self.schema = schema
         self.analyzer = analyzer if analyzer is not None else BigRootsAnalyzer(schema)
@@ -152,6 +160,7 @@ class FleetAggregator:
         self.max_stages = max_stages
         self.lease = None if lease is None else float(lease)
         self._clock = clock
+        self.policy = policy
         # host → {boot: last accepted seq}, newest-seen boots last; capped
         # at _MAX_BOOTS_PER_HOST incarnations (see ingest).
         self.host_seq: dict[str, dict[int, int]] = {}
@@ -222,6 +231,8 @@ class FleetAggregator:
             if delta.host in self.dropped_hosts:
                 self.dropped_hosts.discard(delta.host)
                 self.host_rejoins += 1
+                if self.policy is not None:
+                    self.policy.note_rejoin(delta.host)
             nodes = self._host_nodes.setdefault(delta.host, set())
             for s in delta.stages:
                 nodes.update(s.nodes)
@@ -251,14 +262,21 @@ class FleetAggregator:
         return rows
 
     # -- diagnosis ---------------------------------------------------------
-    def step(self) -> list:
+    def step(self, *, step_time: float | None = None) -> list:
         """One fleet-wide diagnosis tick over every merged stage window
         (single batched gate evaluation via ``analyze_fleet``).  Returns
         the newly confirmed :class:`~repro.core.analyzer.RootCause`\\ s
         (the stream's emit-once/decay dedup applies), plus one synthesized
         ``DROPOUT_FEATURE`` cause per host whose lease just expired (see
         the class docstring).  Retained time-spanned windows also advance
-        to the fleet clock here so silent hosts' stages keep decaying."""
+        to the fleet clock here so silent hosts' stages keep decaying.
+
+        With a ``policy`` (:class:`~repro.ft.policy.PolicyEngine`), the
+        tick's causes — dropout escalations included — are handed to the
+        policy after diagnosis; a host-dropout finding can thus trigger a
+        cordon + re-mesh plan in the same tick it was detected.  Pass the
+        caller's measured per-step wall time as ``step_time`` to feed the
+        policy's rollback verifier."""
         causes = self.stream.step()
         self._ticks += 1
         for cause in causes:
@@ -266,6 +284,10 @@ class FleetAggregator:
         if self.lease is not None:
             causes.extend(self._check_leases())
         self._advance_fleet_clock()
+        if self.policy is not None:
+            self.policy.step(
+                causes, step_time=step_time, live_hosts=self.num_live_hosts
+            )
         return causes
 
     def _check_leases(self) -> list[RootCause]:

@@ -85,7 +85,11 @@ class TestArchitectureDoc:
         text = _read(ARCH)
         for needle in ("Eq. 5", "Eq. 6", "Eq. 7", "cross-reference",
                        "FleetAggregator", "wire_format.md",
-                       "repro.telemetry.transport"):
+                       "repro.telemetry.transport",
+                       # the closed-loop hop: causes don't just get
+                       # reported, they feed the guarded policy engine
+                       "PolicyEngine", "repro.ft.policy", "Actuator",
+                       "guardrail"):
             assert needle in text
 
     def test_dotted_references_resolve(self):
@@ -132,6 +136,21 @@ class TestOperationsDoc:
                 f"operations.md lost {needle!r}"
             )
 
+    def test_closed_loop_mitigation_section(self):
+        """The mitigation ops guide must keep its three load-bearing
+        parts: rule syntax, guardrail tuning, reading the audit log."""
+        text = _read(OPS)
+        for needle in ("Closed-loop mitigation", "Rule syntax",
+                       "Guardrail tuning", "Reading the audit log",
+                       "--mitigate", "--mitigate-dry-run", "--policy",
+                       "--audit-log", "min_recurrence", "cooldown",
+                       "min_fleet", "flap", "rollback", "verify_steps",
+                       "suppress", "actuator_noop", "dry-run",
+                       "ab_compare", "fault_tolerance_demo.py"):
+            assert needle.lower() in text.lower(), (
+                f"operations.md lost {needle!r}"
+            )
+
     def test_readme_links_here_for_rebaseline(self):
         """The re-baseline workflow moved here; the README must keep a
         pointer instead of a divergent copy."""
@@ -169,6 +188,17 @@ class TestHelpMatchesDocs:
                                          "bounded")),
         ("repro.telemetry.DeltaServer", ("ack", "drain", "thread")),
         ("repro.telemetry.ShmRing", ("producer", "consumer", "cursor")),
+        ("repro.ft.PolicyEngine", ("guardrail", "dry_run", "actuator",
+                                   "audit")),
+        ("repro.ft.policy", ("cooldown", "rate limit", "flap",
+                             "rollback", "audit log", "dry_run")),
+        ("repro.ft.Rule", ("scope", "recurrence", "target")),
+        ("repro.ft.Actuator", ("apply", "rollback", "actuator_noop")),
+        ("repro.ft.GuardrailConfig", ("tuning",)),
+        ("repro.ft.supervisor", ("backoff", "jitter", "healthy")),
+        ("repro.anomaly.ClosedLoopSim", ("stage", "policy", "cordoned")),
+        ("repro.anomaly.loop", ("ab_compare", "step (stage) time",
+                                "dry_run")),
     ])
     def test_docstring_covers(self, obj_path, needles):
         parts = obj_path.split(".")
