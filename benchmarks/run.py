@@ -42,6 +42,7 @@ BENCHES = {
     "streaming_scale": scale_bench.streaming_scale,
     "fleet_gates": scale_bench.fleet_gates,
     "fleet_merge": scale_bench.fleet_merge,
+    "tree_merge": scale_bench.tree_merge,
     "wire_transport": scale_bench.wire_transport,
     "policy_eval": scale_bench.policy_eval,
     "kernels": scale_bench.kernel_bench,
@@ -112,7 +113,8 @@ def main() -> None:
         wanted = argv
     elif check:
         wanted = ["analyzer_scale", "streaming_scale", "fleet_gates",
-                  "fleet_merge", "wire_transport", "policy_eval"]
+                  "fleet_merge", "tree_merge", "wire_transport",
+                  "policy_eval"]
     else:
         wanted = list(BENCHES)
 

@@ -621,6 +621,99 @@ def wire_transport(n_hosts: int = 8, rows_per_host: int = 2048,
     return rows, csv
 
 
+def tree_merge(n_hosts: int = 64, fanout: int = 8, rows_per_host: int = 256,
+               reps: int = 5):
+    """Depth-2 fan-in tree vs star at 64 hosts (16384 fleet rows/tick).
+
+    - ``tree_merge_64hosts`` (CI-gated): one full depth-2 tick — 64 host
+      payloads ingested across 8 in-process
+      :class:`~repro.serve.fleet.TreeAggregator` mid-tiers (8 hosts
+      each), each mid-tier enveloping + forwarding, the root decoding the
+      8 ``BRDF`` envelopes, inner-ingesting all 64 leaf payloads, and
+      running one fleet diagnosis step.  This is the whole extra cost of
+      the tree topology (double decode + double watermark bookkeeping);
+      journaling is off, as on a non-HA mid-tier.
+    - ``star_merge_64hosts``: the same 64 payloads straight into one root
+      (ungated reference; the derived column of the gated row carries the
+      tree/star overhead ratio).
+
+    The derived column also asserts the tentpole invariant on every run:
+    the tree root's exported windows are **byte-identical** to the star
+    root's (``windows_equal=1``).
+    """
+    from repro.serve.fleet import TreeAggregator
+
+    an = BigRootsAnalyzer(JAX_FEATURES)
+    payloads = []
+    for h in range(n_hosts):
+        cols = _host_stream_columns(h, rows_per_host, seed=900)
+        payloads.append(_stream_payload(cols, h, 2))
+    # Contiguous sub-fleets so the tree delivers rows in the same order
+    # as the star baseline (the identity check is byte-level).
+    per = n_hosts // fanout
+    groups = [payloads[j * per:(j + 1) * per] for j in range(fanout)]
+
+    class _Pipe:
+        """Ack-less in-process parent: push is delivery."""
+
+        def __init__(self):
+            self.sent = []
+
+        def send_bytes(self, payload, boot, seq):
+            self.sent.append(payload)
+            return True
+
+    def star_tick():
+        # A parent-less TreeAggregator behaves exactly like a flat
+        # FleetAggregator; using it for the star side too gives both
+        # roots the window-export surface the identity check needs.
+        agg = TreeAggregator(JAX_FEATURES, an, name="root")
+        for p in payloads:
+            agg.ingest(p)
+        agg.step()
+        return agg
+
+    def tree_tick():
+        # Same name as the star root: _export_windows stamps the name
+        # into the image payload, and the derived check compares bytes.
+        root = TreeAggregator(JAX_FEATURES, an, name="root")
+        for j, group in enumerate(groups):
+            pipe = _Pipe()
+            mid = TreeAggregator(JAX_FEATURES, name=f"agg{j}", parent=pipe)
+            for p in group:
+                mid.ingest(p)
+            mid.pump()
+            for env in pipe.sent:
+                root.ingest(env)
+        root.step()
+        return root
+
+    def timed(fn):
+        fn()
+        best = float("inf")
+        for _ in range(reps):
+            with Timer() as t:
+                fn()
+            best = min(best, t.seconds)
+        return best * 1e6
+
+    star_us = timed(star_tick)
+    tree_us = timed(tree_tick)
+    star_root, tree_root = star_tick(), tree_tick()
+    equal = int(tree_root._export_windows() == star_root._export_windows()
+                and tree_root.rows_ingested == star_root.rows_ingested)
+
+    csv = [
+        (f"scale/tree_merge_{n_hosts}hosts", tree_us,
+         f"depth-2 {fanout}x{n_hosts // fanout};windows_equal={equal};"
+         f"overhead_vs_star={tree_us / star_us:.2f}x"),
+        (f"scale/star_merge_{n_hosts}hosts", star_us,
+         "flat ingest+diagnose reference"),
+    ]
+    rows = [(n_hosts, tree_us, star_us, equal)]
+    return rows, csv
+
+
 def kernel_bench():
     """Interpret-mode kernel timings vs jnp references (CPU walltime; the
     interesting column is allclose-verified equivalence + shapes)."""

@@ -28,6 +28,17 @@ What it does:
    corruption would break the equality; the ``(boot, seq)`` dedup is
    what makes the at-least-once channel safe to compare at all.
 
+**Tree mode** (``--aggs N``): hosts connect to N intermediate
+:class:`~repro.serve.fleet.TreeAggregator` processes (Unix sockets)
+instead of the root; each aggregator merges its sub-fleet, journals every
+accepted payload, and forwards re-stamped ``BRDF`` envelopes upstream.
+Mid-run the aggregator owning the straggler host is SIGKILLed and
+restarted against the same journal — it must resume watermarks and
+re-forward its unacked tail, so the root still sees **exactly**
+``hosts × steps`` rows (zero lost, zero duplicated; redelivery surfaces
+only as inner ``duplicate_drops``) and a cause stream byte-identical to
+in-process replay of the received envelopes.
+
 Run it::
 
     PYTHONPATH=src python examples/fleet_demo.py                # 3 hosts, TCP
@@ -35,10 +46,14 @@ Run it::
         --kill-after 8 --lease 1.0                              # CI shape
     PYTHONPATH=src python examples/fleet_demo.py --transport unix
     PYTHONPATH=src python examples/fleet_demo.py --transport shm
+    PYTHONPATH=src python examples/fleet_demo.py --hosts 4 --aggs 2 \\
+        --steps 24 --agg-kill-after 8                 # depth-2 tree + failover
 
 Exits non-zero if the cause streams differ or no dropout escalation
-surfaced.  See ``docs/operations.md`` for the production version of this
-topology and ``docs/wire_format.md`` for what the bytes look like.
+surfaced (star mode) / rows were lost or duplicated through the
+aggregator failover (tree mode).  See ``docs/operations.md`` for the
+production version of this topology and ``docs/wire_format.md`` for what
+the bytes look like.
 """
 from __future__ import annotations
 
@@ -54,7 +69,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 
 from repro.core import BigRootsAnalyzer, JAX_FEATURES  # noqa: E402
-from repro.serve.fleet import DROPOUT_FEATURE, FleetAggregator  # noqa: E402
+from repro.serve.fleet import (  # noqa: E402
+    DROPOUT_FEATURE,
+    FleetAggregator,
+    TreeAggregator,
+)
 from repro.telemetry.events import StepTelemetry  # noqa: E402
 from repro.telemetry.transport import (  # noqa: E402
     DeltaClient,
@@ -123,6 +142,43 @@ def run_host(args) -> int:
     ok = sink.flush(timeout=15.0)
     sink.close()
     return 0 if ok else 3
+
+
+def run_agg(args) -> int:
+    """Intermediate-aggregator process body: serve a sub-fleet with
+    deferred (durable) acks, journal every accepted payload, forward
+    re-stamped envelopes to the root.  Runs until killed — SIGKILL
+    mid-run is the point; the respawn reuses the same ``--listen``
+    socket path and ``--journal`` file and must resume where the dead
+    incarnation's journal left off."""
+    from repro.telemetry.transport import DeltaServer
+
+    sock_path = args.listen[len("unix:"):]
+    try:
+        os.unlink(sock_path)  # a SIGKILLed incarnation leaves this behind
+    except OSError:
+        pass
+    agg = TreeAggregator(
+        JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES),
+        name=f"agg{args.host_index}", parent=args.connect,
+        journal=args.journal, forward_batch=8,
+    )
+    if agg.recovered_payloads:
+        print(f"[agg{args.host_index}] resumed from journal: "
+              f"{agg.recovered_payloads} payloads "
+              f"({agg.recovered_rows} rows), "
+              f"{agg.pending_forwards} re-queued for forward", flush=True)
+    server = DeltaServer(args.listen, ack="drain")
+    while True:  # no graceful shutdown on purpose: the parent SIGKILLs us
+        server.drain_into(agg)
+        agg.pump()
+        time.sleep(args.pace)
+
+
+def agg_of(host_index: int, aggs: int, hosts: int) -> int:
+    """Contiguous host→aggregator assignment; keeps the straggler (h1)
+    on agg0 for the default shapes."""
+    return host_index * aggs // hosts
 
 
 def fresh_aggregator(lease: float | None) -> FleetAggregator:
@@ -283,6 +339,133 @@ def run_parent(args) -> int:
     return 0
 
 
+def run_tree_parent(args) -> int:
+    """Depth-2 topology: root ← ``--aggs`` aggregator processes ← hosts,
+    with a SIGKILL + journal-restart of the straggler's aggregator."""
+    from repro.telemetry.transport import DeltaServer
+
+    workdir = tempfile.mkdtemp(prefix="fleet_tree_")
+    root_addr = "unix:" + os.path.join(workdir, "root.sock")
+    root = DeltaServer(root_addr)
+
+    def agg_cmd(j: int) -> list[str]:
+        return [sys.executable, os.path.abspath(__file__), "--agg-child",
+                "--host-index", str(j),
+                "--listen", "unix:" + os.path.join(workdir, f"agg{j}.sock"),
+                "--journal", os.path.join(workdir, f"agg{j}.journal"),
+                "--connect", root_addr, "--pace", str(args.pace)]
+
+    agg_procs = {j: subprocess.Popen(agg_cmd(j)) for j in range(args.aggs)}
+    deadline = time.time() + args.timeout
+    while (any(not os.path.exists(os.path.join(workdir, f"agg{j}.sock"))
+               for j in range(args.aggs)) and time.time() < deadline):
+        time.sleep(0.05)
+
+    host_procs = {}
+    for i in range(args.hosts):
+        j = agg_of(i, args.aggs, args.hosts)
+        host_procs[f"h{i}"] = subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--child",
+             "--host-index", str(i), "--steps", str(args.steps),
+             "--transport", "unix",
+             "--connect", "unix:" + os.path.join(workdir, f"agg{j}.sock"),
+             "--pace", str(args.pace)],
+        )
+
+    kill_agg = agg_of(STRAGGLER_HOST_INDEX, args.aggs, args.hosts)
+    straggler = f"h{STRAGGLER_HOST_INDEX}"
+    expected_rows = args.hosts * args.steps
+    agg = fresh_aggregator(lease=args.lease)
+    events: list[tuple[str, bytes | None]] = []
+    live_causes = []
+    killed_at = None
+    restarted = False
+
+    def drain() -> None:
+        for p in root.drain():
+            events.append(("ingest", p))
+            agg.ingest(p)
+
+    def tick() -> None:
+        events.append(("step", None))
+        for cause in agg.step():
+            if cause.feature != DROPOUT_FEATURE:
+                live_causes.append(cause)
+
+    while time.time() < deadline:
+        drain()
+        tick()
+        seen = max(agg.host_seq.get(straggler, {}).values(), default=0)
+        if (args.agg_kill_after > 0 and killed_at is None
+                and seen >= args.agg_kill_after):
+            print(f"[tree] SIGKILL agg{kill_agg} after the root saw "
+                  f"{seen} deltas from {straggler}")
+            agg_procs[kill_agg].kill()
+            agg_procs[kill_agg].wait()
+            killed_at = time.time()
+        if (killed_at is not None and not restarted
+                and time.time() - killed_at >= args.agg_restart_delay):
+            print(f"[tree] restarting agg{kill_agg} from its journal")
+            agg_procs[kill_agg] = subprocess.Popen(agg_cmd(kill_agg))
+            restarted = True
+        hosts_done = all(p.poll() is not None for p in host_procs.values())
+        if hosts_done and agg.rows_ingested >= expected_rows:
+            drain()
+            tick()
+            break
+        time.sleep(args.pace)
+
+    timed_out = {h for h, p in host_procs.items() if p.poll() is None}
+    for p in list(host_procs.values()) + list(agg_procs.values()):
+        if p.poll() is None:
+            p.kill()
+        p.wait()
+    root.close()
+
+    # -- the proof ---------------------------------------------------------
+    # Same replay oracle as the star run — the recorded bytes are BRDF
+    # envelopes here, but ingest is topology-agnostic — plus strict row
+    # conservation through the failover.
+    replayed = replay(events)
+    got = [cause_fields(c) for c in live_causes]
+    want = [cause_fields(c) for c in replayed]
+    identical = got == want
+    conserved = agg.rows_ingested == expected_rows
+    hosts_ok = not timed_out and all(
+        p.returncode == 0 for p in host_procs.values())
+    print(f"\n[fleet_demo] hosts={args.hosts} aggs={args.aggs} "
+          f"envelopes={sum(1 for k, _ in events if k == 'ingest')} "
+          f"rows={agg.rows_ingested}/{expected_rows} "
+          f"dup_drops={agg.duplicate_drops} "
+          f"agg_restarts={agg.host_restarts}")
+    print(f"[fleet_demo] causes via tree: {len(live_causes)}  "
+          f"in-process replay: {len(replayed)}  byte-identical: {identical}")
+    ok = (identical and bool(live_causes) and conserved and hosts_ok
+          and (args.agg_kill_after == 0
+               or (restarted and agg.host_restarts >= 1)))
+    if not ok:
+        if not identical:
+            for g, w in zip(got, want):
+                if g != w:
+                    print("  first divergence:\n   tree:  ", g,
+                          "\n   replay:", w)
+                    break
+            if len(got) != len(want):
+                print(f"  length mismatch: {len(got)} vs {len(want)}")
+        if not conserved:
+            print(f"  row conservation broken: {agg.rows_ingested} != "
+                  f"{expected_rows}")
+        if not hosts_ok:
+            print(f"  host failures: timed out {sorted(timed_out)}, codes "
+                  f"{ {h: p.returncode for h, p in host_procs.items()} }")
+        print("[fleet_demo] FAILED")
+        return 1
+    print("[fleet_demo] OK — aggregator failover lost nothing: tree-"
+          "delivered causes are byte-identical to in-process replay and "
+          f"all {expected_rows} rows arrived exactly once")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--hosts", type=int, default=3)
@@ -297,13 +480,34 @@ def main() -> int:
     ap.add_argument("--pace", type=float, default=0.02,
                     help="per-step sleep in hosts and parent ticks")
     ap.add_argument("--timeout", type=float, default=60.0)
+    ap.add_argument("--aggs", type=int, default=0,
+                    help="intermediate TreeAggregator processes (0 = star "
+                         "topology); tree mode uses Unix sockets for every "
+                         "hop")
+    ap.add_argument("--agg-kill-after", type=int, default=8,
+                    help="SIGKILL the straggler's aggregator once the root "
+                         "has seen this many of its deltas (0 disables)")
+    ap.add_argument("--agg-restart-delay", type=float, default=0.3,
+                    help="seconds before the killed aggregator is respawned "
+                         "against the same journal")
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--agg-child", action="store_true",
+                    help=argparse.SUPPRESS)
     ap.add_argument("--host-index", type=int, default=0,
                     help=argparse.SUPPRESS)
     ap.add_argument("--connect", default="", help=argparse.SUPPRESS)
+    ap.add_argument("--listen", default="", help=argparse.SUPPRESS)
+    ap.add_argument("--journal", default="", help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.agg_child:
+        return run_agg(args)
     if args.child:
         return run_host(args)
+    if args.aggs > 0:
+        if args.transport == "shm":
+            raise SystemExit("tree mode uses socket hops; --transport shm "
+                             "only applies to the star topology")
+        return run_tree_parent(args)
     return run_parent(args)
 
 

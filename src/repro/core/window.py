@@ -705,6 +705,47 @@ class SlidingStageWindow:
         """Live rows as TaskRecords (compatibility view; O(n) — not hot)."""
         return self.seal().tasks
 
+    def export_live(self) -> dict:
+        """Snapshot the live rows as plain columnar blocks (copies), shaped
+        for re-ingest through ``add_rows``: the aggregator-HA journal path
+        serializes these as a StageDelta so a restarted aggregator rebuilds
+        the window exactly (schema columns with present masks, plus extras
+        re-flattened to masked columns — re-ingest restores them as extras).
+        The locality *field* travels in the ``locality`` array, never as a
+        feature column (``add_rows`` re-derives that column from it)."""
+        idx = self.live_index()
+        columns: dict[str, np.ndarray] = {}
+        present: dict[str, np.ndarray] = {}
+        for name, j in self._col.items():
+            if j == self._loc_j:
+                continue
+            columns[name] = self._raw[idx, j].copy()
+            present[name] = self._present[idx, j].copy()
+        extra_names = sorted(
+            {nm for i in idx if int(i) in self._extras
+             for nm in self._extras[int(i)]}
+        )
+        for nm in extra_names:
+            vals = np.zeros(len(idx), dtype=np.float64)
+            mask = np.zeros(len(idx), dtype=bool)
+            for r, i in enumerate(idx):
+                row = self._extras.get(int(i))
+                if row is not None and nm in row:
+                    vals[r] = row[nm]
+                    mask[r] = True
+            columns[nm] = vals
+            present[nm] = mask
+        return {
+            "stage_id": self.stage_id,
+            "task_ids": [self._task_ids[int(i)] for i in idx],
+            "nodes": [self._node_names[c] for c in self._node_codes[idx]],
+            "starts": self._starts[idx].copy(),
+            "ends": self._ends[idx].copy(),
+            "locality": self._locality[idx].copy(),
+            "columns": columns,
+            "present": present,
+        }
+
     # -- internals ---------------------------------------------------------
     def _scatter(self, codes: np.ndarray, v: np.ndarray, sign: float) -> None:
         """Add/subtract per-node counts and column sums for a row batch

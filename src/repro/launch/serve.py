@@ -16,6 +16,7 @@ import numpy as np
 from ..configs import get_config
 from ..core import BigRootsAnalyzer, JAX_FEATURES, render_markdown, summarize
 from ..models import Model, smoke_variant
+from ..serve import Diagnosis
 from ..serve.engine import Request, ServeEngine
 from ..telemetry.events import StepTelemetry
 from ..telemetry.sampler import SystemSampler
@@ -61,7 +62,9 @@ def main() -> None:
         batch_size=args.batch_size,
         temperature=args.temperature,
         telemetry=telem,
-        live_analyzer=BigRootsAnalyzer(JAX_FEATURES, timelines=timeline),
+        diagnosis=Diagnosis.local(
+            BigRootsAnalyzer(JAX_FEATURES, timelines=timeline)
+        ),
     )
     with SystemSampler("host0", timeline, interval=0.25):
         t0 = time.time()

@@ -49,9 +49,10 @@ from ..ft.elastic import reshard_plan
 from ..ft.mitigation import MitigationPlanner
 from ..ft.policy import ActionKind, DEFAULT_RULES, PolicyEngine, load_policy
 from ..models import Model, smoke_variant
-from ..serve.fleet import FleetAggregator
+from ..serve import Diagnosis
+from ..serve.fleet import FleetAggregator, TreeAggregator
 from ..telemetry.events import GcTimer, StepTelemetry
-from ..telemetry.transport import DeltaClient, DeltaServer
+from ..telemetry.transport import DeltaServer
 from ..telemetry.sampler import SystemSampler
 from ..telemetry.timeline import ResourceTimeline
 from ..train.optimizer import AdamWConfig
@@ -89,9 +90,30 @@ def build_argparser() -> argparse.ArgumentParser:
                          "fleet diagnosis — the launcher role of a "
                          "multi-host launch")
     ap.add_argument("--fleet-lease", type=float, default=10.0,
-                    help="seconds without a delta before a connected host "
-                         "is declared dark and a dropout cause is "
-                         "escalated (only meaningful with --fleet-listen)")
+                    help="lease floor: seconds without a delta before a "
+                         "connected host is declared dark and a dropout "
+                         "cause is escalated; the effective per-host lease "
+                         "adapts upward from observed cadence (only "
+                         "meaningful with --fleet-listen)")
+    ap.add_argument("--fleet-role",
+                    choices=["auto", "host", "aggregator", "root"],
+                    default="auto",
+                    help="explicit fleet role; default derives it from the "
+                         "flags (--fleet-connect => host, --fleet-parent "
+                         "=> aggregator, --fleet-listen => root)")
+    ap.add_argument("--fleet-parent", default="",
+                    help="run as a tree aggregator: accept children at "
+                         "--fleet-listen, merge locally, and forward "
+                         "pre-merged envelopes upstream to this address "
+                         "('host:port' or 'unix:/path')")
+    ap.add_argument("--fleet-journal", default="",
+                    help="aggregator-HA journal path: watermarks, window "
+                         "snapshots, and unacked forwards persist here so "
+                         "a restarted aggregator resumes instead of "
+                         "re-learning (see docs/operations.md)")
+    ap.add_argument("--fleet-name", default="",
+                    help="fleet-unique aggregator identity for tree roles "
+                         "(default: --host); stable across restarts")
     ap.add_argument("--mitigate", action="store_true",
                     help="close the loop: run the guarded policy engine "
                          "(ft.policy) over every live-diagnosis tick and "
@@ -236,37 +258,69 @@ def run(args) -> dict:
     )
     # Live diagnosis runs through the launcher's fleet-aggregation path —
     # per-step StepDeltas merged into per-stage windows, one analyze_fleet
-    # sweep per step.  On a single-host run it is a fleet of one.  A real
-    # multi-host launch wires the same path over the socket transport:
-    # hosts run with --fleet-connect (ship deltas, no local sweep) and the
-    # launcher runs with --fleet-listen (drain every host's deltas into
-    # its aggregator each tick, with host-dropout leases armed).
+    # sweep per step — wired through the Diagnosis facade.  On a
+    # single-host run it is a fleet of one.  A multi-host launch picks a
+    # role per process: hosts run with --fleet-connect (forward deltas,
+    # no local sweep), the root runs with --fleet-listen (merge + sweep,
+    # host-dropout leases armed), and intermediate tree aggregators run
+    # with --fleet-listen *and* --fleet-parent (merge their sub-fleet,
+    # forward pre-merged envelopes upstream; add --fleet-journal for HA).
     fleet = None
-    fleet_client = None
     fleet_server = None
+    diagnosis = None
     fleet_connect = getattr(args, "fleet_connect", "")
     fleet_listen = getattr(args, "fleet_listen", "")
-    if fleet_connect and fleet_listen:
+    fleet_parent = getattr(args, "fleet_parent", "")
+    fleet_journal = getattr(args, "fleet_journal", "")
+    fleet_name = getattr(args, "fleet_name", "") or args.host
+    role = getattr(args, "fleet_role", "auto")
+    if fleet_connect and (fleet_listen or fleet_parent):
         raise SystemExit(
-            "--fleet-connect and --fleet-listen are mutually exclusive "
-            "roles: a host ships its deltas upstream, a launcher "
-            "aggregates — relaying is not supported"
+            "--fleet-connect is the leaf-host role and excludes "
+            "--fleet-listen/--fleet-parent: a host ships its deltas "
+            "upstream, aggregators listen (and forward with "
+            "--fleet-parent)"
         )
+    if role == "auto":
+        role = ("host" if fleet_connect
+                else "aggregator" if fleet_parent else "root")
+    if role == "host" and not fleet_connect:
+        raise SystemExit("--fleet-role host needs --fleet-connect")
+    if role == "aggregator" and not fleet_parent:
+        raise SystemExit("--fleet-role aggregator needs --fleet-parent")
     if live_diagnose:
-        if fleet_connect:
-            fleet_client = DeltaClient(fleet_connect)
+        if role == "host":
+            diagnosis = Diagnosis.forward(fleet_connect)
         else:
-            fleet = FleetAggregator(
-                JAX_FEATURES,
-                BigRootsAnalyzer(JAX_FEATURES, timelines=timeline),
+            agg_kwargs = dict(
                 max_rows=(getattr(args, "live_window", 0) or None),
                 max_stages=8,
                 lease=(getattr(args, "fleet_lease", 10.0)
                        if fleet_listen else None),
             )
+            analyzer = BigRootsAnalyzer(JAX_FEATURES, timelines=timeline)
+            if role == "aggregator" or fleet_journal:
+                fleet = TreeAggregator(
+                    JAX_FEATURES, analyzer, name=fleet_name,
+                    parent=(fleet_parent or None),
+                    journal=(fleet_journal or None), **agg_kwargs,
+                )
+            else:
+                fleet = FleetAggregator(JAX_FEATURES, analyzer, **agg_kwargs)
+            # An intermediate aggregator forwards; the sweep (and the
+            # causes) belong to the root.  Its Diagnosis still pumps the
+            # upstream side every tick.
+            diagnosis = Diagnosis.fleet(fleet, drive=(role != "aggregator"))
             if fleet_listen:
-                fleet_server = DeltaServer(fleet_listen)
-                print(f"[fleet] aggregating at {fleet_server.address}")
+                # With a journal, defer child acks until drain_into has
+                # ingested (and journaled) — a child's ack then means
+                # "durable across my restart", closing the failover gap.
+                fleet_server = DeltaServer(
+                    fleet_listen,
+                    ack="drain" if fleet_journal else "enqueue",
+                )
+                print(f"[fleet] {role} aggregating at "
+                      f"{fleet_server.endpoint}")
     live_causes: list[dict] = []
 
     # Closed-loop mitigation: policy engine ticked by the fleet aggregator
@@ -329,13 +383,12 @@ def run(args) -> dict:
                         ckpt.save(step, state["params"],
                                   blocking=not go_async)
             losses.append(loss)
-            if fleet_client is not None:
-                fleet_client.send(telem.drain_delta())
-            elif fleet is not None:
+            if diagnosis is not None:
                 if fleet_server is not None:
                     fleet_server.drain_into(fleet)
-                fleet.ingest_host(telem)
-                for cause in fleet.step(step_time=time.time() - t_step0):
+                for cause in diagnosis.tick(
+                    telem, step_time=time.time() - t_step0
+                ):
                     live_causes.append({
                         "step": step, "task": cause.task_id,
                         "feature": cause.feature, "value": cause.value,
@@ -351,15 +404,16 @@ def run(args) -> dict:
     gc_timer.uninstall()
     if ckpt:
         ckpt.wait()
-    if fleet_client is not None:
+    if diagnosis is not None and diagnosis.mode == "forward":
         # At-least-once: block until the aggregator acked everything this
         # host produced (a crash-free run must lose nothing), then hang up.
-        if not fleet_client.flush(timeout=10.0):
+        if not diagnosis.flush(timeout=10.0):
+            sink = diagnosis.sink
             print(f"[fleet] WARNING: aggregator unreachable at exit — "
-                  f"{fleet_client.unacked} deltas unacked, "
-                  f"{fleet_client.resend_drops} shed earlier; the fleet "
+                  f"{sink.unacked} deltas unacked, "
+                  f"{sink.resend_drops} shed earlier; the fleet "
                   f"view of this host is incomplete")
-        fleet_client.close()
+        diagnosis.close()
     if fleet_server is not None:
         # Quiesce before closing: frames the server acks are a promise to
         # ingest, and straggling hosts may still be flushing their tails.
@@ -379,6 +433,14 @@ def run(args) -> dict:
                 "feature": cause.feature, "value": cause.value,
             })
         fleet_server.close()
+    if isinstance(fleet, TreeAggregator):
+        # Push the forwarded tail upstream (and ack it into the journal)
+        # before exit; a clean shutdown leaves nothing pending.
+        if fleet.parent is not None and not fleet.flush(timeout=10.0):
+            print(f"[fleet] WARNING: parent unreachable at exit — "
+                  f"{fleet.pending_forwards} payloads unacked (journaled: "
+                  f"{'yes' if fleet.journal else 'no'})")
+        fleet.close()
     if policy is not None:
         policy.close()
 

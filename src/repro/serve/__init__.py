@@ -1,8 +1,12 @@
 """Serving substrate: batched prefill/decode engine with KV/state caches,
-plus the launcher-side :class:`FleetAggregator` for merged fleet-wide
-in-loop diagnosis (sharded per-host telemetry → one BigRoots sweep)."""
+plus the launcher-side :class:`FleetAggregator` / :class:`TreeAggregator`
+fan-in fabric for merged fleet-wide in-loop diagnosis (sharded per-host
+telemetry → one BigRoots sweep), all wired through the
+:class:`Diagnosis` facade."""
+from .diagnosis import Diagnosis
 from .engine import ServeEngine, make_decode_step, make_prefill_step
-from .fleet import FleetAggregator
+from .fleet import AggregatorJournal, FleetAggregator, TreeAggregator
 
-__all__ = ["FleetAggregator", "ServeEngine", "make_decode_step",
+__all__ = ["AggregatorJournal", "Diagnosis", "FleetAggregator",
+           "ServeEngine", "TreeAggregator", "make_decode_step",
            "make_prefill_step"]

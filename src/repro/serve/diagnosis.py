@@ -1,0 +1,176 @@
+"""One wiring surface for in-loop diagnosis: the :class:`Diagnosis` facade.
+
+The serve engine and the launch entry points used to take four
+mutually-exclusive kwargs (``live_analyzer`` / ``fleet`` / ``delta_sink``
+/ ``policy``) whose legal combinations were documented prose.  With tree
+aggregation there are now *four* roles a process can play — local
+analyzer, fleet root, tree aggregator, forwarding host — and one facade
+expresses all of them:
+
+- ``Diagnosis.local(analyzer)`` — per-host in-loop diagnosis over the
+  telemetry's own streaming window (no fleet).
+- ``Diagnosis.fleet(aggregator)`` — ingest into an in-process
+  :class:`~repro.serve.fleet.FleetAggregator` (or
+  :class:`~repro.serve.fleet.TreeAggregator`) and, when ``drive=True``,
+  run the merged sweep each tick.  Exactly one party per aggregator
+  should drive (see the engine docstring) — pass ``drive=False`` for the
+  others.
+- ``Diagnosis.forward(sink)`` — ship the per-step delta to another
+  process: anything with ``send(delta)``
+  (:class:`~repro.telemetry.transport.DeltaClient`,
+  :class:`~repro.telemetry.transport.RingSender`) or an
+  :class:`~repro.telemetry.transport.Endpoint`/address string, connected
+  for you.
+
+Any mode can carry a ``policy``
+(:class:`~repro.ft.policy.PolicyEngine`): each tick's fresh causes are
+handed to it with the live-host count — unless the policy object *is*
+the aggregator's own (then the aggregator's step already ticked it, and
+double-ticking would advance cooldowns twice).
+
+Usage::
+
+    diag = Diagnosis.fleet(TreeAggregator(schema, name="agg0",
+                                          parent="root:9100"))
+    engine = ServeEngine(model, params, telemetry=telem, diagnosis=diag)
+    # or by hand, one call per step:
+    fresh = diag.tick(telem, step_time=dt)
+"""
+from __future__ import annotations
+
+from ..core.window import RootCauseStream
+
+
+class Diagnosis:
+    """Bundle of analyzer / aggregator-or-sink / policy — the one object
+    a host passes to :class:`~repro.serve.engine.ServeEngine` (or drives
+    directly via :meth:`tick`) to say what happens to each step's
+    telemetry.  Build via :meth:`local`, :meth:`fleet`, or
+    :meth:`forward`."""
+
+    def __init__(
+        self,
+        *,
+        analyzer=None,
+        aggregator=None,
+        sink=None,
+        policy=None,
+        drive: bool = True,
+    ) -> None:
+        modes = sum(x is not None for x in (analyzer, aggregator, sink))
+        if modes > 1 or (modes == 0 and policy is None):
+            raise ValueError(
+                "Diagnosis needs exactly one of analyzer= (local mode), "
+                "aggregator= (fleet mode), or sink= (forward mode) — or "
+                "policy= alone (policy-only ticks)"
+            )
+        if sink is not None and not hasattr(sink, "send"):
+            # Endpoint / address string: connect it here so launch code
+            # and flags can hand strings straight through.
+            from ..telemetry.transport import Endpoint
+            sink = Endpoint.parse(sink).connect()
+        self.analyzer = analyzer
+        self.aggregator = aggregator
+        self.sink = sink
+        self.policy = policy
+        self.drive = bool(drive)
+        self._stream: RootCauseStream | None = None
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def local(cls, analyzer, *, policy=None) -> "Diagnosis":
+        """Per-host diagnosis: run ``analyzer`` over the telemetry's own
+        streaming window each tick (needs
+        ``StepTelemetry(streaming=True)``)."""
+        return cls(analyzer=analyzer, policy=policy)
+
+    @classmethod
+    def fleet(cls, aggregator, *, drive: bool = True,
+              policy=None) -> "Diagnosis":
+        """Fleet diagnosis: drain each tick's delta into ``aggregator``
+        in-process (needs ``StepTelemetry(wire=True)``); ``drive``
+        selects whether this party runs the merged sweep."""
+        return cls(aggregator=aggregator, drive=drive, policy=policy)
+
+    @classmethod
+    def forward(cls, sink, *, policy=None) -> "Diagnosis":
+        """Forwarding host: ship each tick's delta to ``sink`` — an
+        object with ``send(delta)``, or an Endpoint/address string to
+        connect (needs ``StepTelemetry(wire=True)``)."""
+        return cls(sink=sink, policy=policy)
+
+    # -- wiring --------------------------------------------------------------
+    @property
+    def mode(self) -> str:
+        if self.aggregator is not None:
+            return "fleet"
+        if self.sink is not None:
+            return "forward"
+        if self.analyzer is not None:
+            return "local"
+        return "policy"
+
+    def bind(self, telemetry) -> None:
+        """Validate ``telemetry`` against the mode and finish wiring
+        (idempotent; the engine calls this at construction)."""
+        if telemetry is None:
+            raise ValueError("diagnosis needs a StepTelemetry to consume")
+        if self.mode == "policy":
+            return
+        if self.mode in ("fleet", "forward"):
+            if not getattr(telemetry, "wire", False):
+                raise ValueError(
+                    "fleet aggregation needs StepTelemetry(wire=True)"
+                )
+        elif self._stream is None:
+            if getattr(telemetry, "live_window", None) is None:
+                raise ValueError(
+                    "local diagnosis needs StepTelemetry(streaming=True)"
+                )
+            self._stream = RootCauseStream(self.analyzer,
+                                           telemetry.live_window)
+
+    # -- per-step drive ------------------------------------------------------
+    def tick(self, telemetry, step_time: float | None = None) -> list:
+        """Consume one step's telemetry and return the tick's freshly
+        confirmed causes (empty in forward mode and for non-driving
+        fleet parties — the causes live where the sweep runs)."""
+        self.bind(telemetry)
+        fresh: list = []
+        if self.aggregator is not None:
+            self.aggregator.ingest_host(telemetry)
+            if self.drive:
+                fresh = self.aggregator.step(step_time=step_time)
+            else:
+                # Non-driving tree roles still owe their parent a pump.
+                pump = getattr(self.aggregator, "pump", None)
+                if pump is not None:
+                    pump()
+        elif self.sink is not None:
+            self.sink.send(telemetry.drain_delta())
+        elif self._stream is not None:
+            fresh = self._stream.step()
+        if (
+            self.policy is not None
+            and self.policy is not getattr(self.aggregator, "policy", None)
+        ):
+            self.policy.step(
+                fresh,
+                step_time=step_time,
+                live_hosts=(self.aggregator.num_live_hosts
+                            if self.aggregator is not None else None),
+            )
+        return fresh
+
+    def flush(self, timeout: float = 30.0) -> bool:
+        """End-of-run drain: flush the sink / the aggregator's upstream
+        side, whichever exists (True when nothing is left unacked)."""
+        target = self.sink if self.sink is not None else self.aggregator
+        fl = getattr(target, "flush", None)
+        return fl(timeout) if fl is not None else True
+
+    def close(self) -> None:
+        for target in (self.sink, self.aggregator):
+            cl = getattr(target, "close", None)
+            if cl is not None:
+                cl()

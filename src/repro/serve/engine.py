@@ -5,40 +5,43 @@ shared jitted decode step (greedy or temperature sampling), and emits
 BigRoots telemetry per step (the serve analog of per-step train tasks:
 stragglers here are slow hosts in a multi-host serving fleet).
 
-With a streaming telemetry (``StepTelemetry(streaming=True)``) and a
-``live_analyzer``, the engine also runs in-loop diagnosis after every
-decode step: newly confirmed root causes land in
-``engine.live_root_causes`` while the batch is still decoding, instead of
-in a post-hoc report.
+In-loop diagnosis is wired through one object: pass
+``diagnosis=``\\ :class:`~repro.serve.diagnosis.Diagnosis` built for the
+role this engine plays —
 
-With a wire telemetry (``StepTelemetry(wire=True)``) and a shared
-:class:`~repro.serve.fleet.FleetAggregator`, the engine instead drains its
-per-step delta into the aggregator and runs the *fleet-wide* merged
-diagnosis — many engines (hosts) feeding one aggregator get one cross-node
-sweep per step instead of N per-host ones.  When several engines share the
-aggregator, exactly one party should drive the sweep: either construct the
-others with ``fleet_step=False`` (they only ingest) or pass
-``fleet_step=False`` everywhere and call ``aggregator.step()`` from the
-launcher once per tick — N engines each stepping would run N sweeps per
-tick and advance the dedup stream's decay clock N× too fast.
+- ``Diagnosis.local(analyzer)`` with ``StepTelemetry(streaming=True)``:
+  per-host diagnosis, newly confirmed root causes land in
+  ``engine.live_root_causes`` while the batch is still decoding;
+- ``Diagnosis.fleet(aggregator)`` with ``StepTelemetry(wire=True)``: the
+  engine drains its per-step delta into the shared
+  :class:`~repro.serve.fleet.FleetAggregator` (or a
+  :class:`~repro.serve.fleet.TreeAggregator` mid-tier) and, when
+  ``drive=True``, runs the *fleet-wide* merged sweep.  When several
+  engines share an aggregator, exactly one party should drive — pass
+  ``drive=False`` for the others (or everywhere, and call
+  ``aggregator.step()`` from the launcher once per tick): N engines each
+  stepping would run N sweeps per tick and advance the dedup stream's
+  decay clock N× too fast;
+- ``Diagnosis.forward(sink)`` with ``StepTelemetry(wire=True)``: the
+  engine only ships its delta to another process —
+  :class:`~repro.telemetry.transport.DeltaClient` (socket),
+  :class:`~repro.telemetry.transport.RingSender` (shm ring), or an
+  address string; the aggregator process owns the causes.
 
-When the aggregator runs in *another process*, pass ``delta_sink`` instead
-of ``fleet``: any object with ``send(delta)`` —
-:class:`~repro.telemetry.transport.DeltaClient` (socket, cross-machine) or
-:class:`~repro.telemetry.transport.RingSender` (same-machine shared-memory
-ring).  The engine then only ships its per-step delta; the aggregator
-process drives the sweep and owns the causes.
+Any mode takes ``policy=`` (:class:`~repro.ft.policy.PolicyEngine`) to
+close the loop: every step's fresh causes are evaluated against the
+policy's rules and acted on through its actuator, with the measured
+decode-step time feeding its rollback verifier.
 
-With a ``policy`` (:class:`~repro.ft.policy.PolicyEngine`), diagnosis
-closes the loop: every step's newly confirmed causes are evaluated
-against the policy's rules and acted on through its actuator, with the
-measured decode-step time feeding the engine's rollback verifier.  The
-policy ticks every step — idle steps advance cooldowns and rollback
-watches.
+The pre-facade kwargs (``live_analyzer`` / ``fleet`` / ``fleet_step`` /
+``delta_sink`` / ``policy``) still work for one release with a
+``DeprecationWarning``; they build the equivalent ``Diagnosis``
+internally.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -46,9 +49,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.window import RootCauseStream
 from ..models.api import Model
 from ..telemetry.events import StepTelemetry
+from .diagnosis import Diagnosis
 from .fleet import FleetAggregator
 
 
@@ -98,9 +101,10 @@ class ServeEngine:
         temperature: float = 0.0,
         telemetry: StepTelemetry | None = None,
         eos_id: int | None = None,
+        diagnosis: Diagnosis | None = None,
         live_analyzer=None,
         fleet: FleetAggregator | None = None,
-        fleet_step: bool = True,
+        fleet_step: bool | None = None,
         delta_sink=None,
         policy=None,
     ) -> None:
@@ -114,30 +118,61 @@ class ServeEngine:
         self._prefill = jax.jit(make_prefill_step(model))
         self._decode = jax.jit(make_decode_step(model, temperature))
         self._key = jax.random.key(0)
-        # In-loop diagnosis: per-host (streaming telemetry + live_analyzer)
-        # or fleet-wide (wire telemetry + shared FleetAggregator).
-        self.diagnosis: RootCauseStream | None = None
-        self.fleet = fleet
-        self.fleet_step = fleet_step
-        self.delta_sink = delta_sink
-        self.policy = policy
         self.live_root_causes: list = []
+        legacy = (live_analyzer is not None or fleet is not None
+                  or delta_sink is not None or policy is not None
+                  or fleet_step is not None)
+        if legacy:
+            warnings.warn(
+                "ServeEngine's live_analyzer=/fleet=/fleet_step=/"
+                "delta_sink=/policy= kwargs are deprecated; pass "
+                "diagnosis=Diagnosis.local/.fleet/.forward(..., "
+                "policy=...) instead",
+                DeprecationWarning, stacklevel=2,
+            )
+            if diagnosis is not None:
+                raise ValueError(
+                    "pass either diagnosis= or the deprecated wiring "
+                    "kwargs, not both"
+                )
+            diagnosis = self._legacy_diagnosis(
+                telemetry, live_analyzer, fleet, fleet_step, delta_sink,
+                policy,
+            )
+        # The one wiring surface: what happens to each step's telemetry
+        # (see repro.serve.diagnosis).  bind() validates the telemetry
+        # mode up front so misconfiguration fails at construction.
+        self.diagnosis = diagnosis
+        if diagnosis is not None:
+            diagnosis.bind(telemetry)
+
+    @staticmethod
+    def _legacy_diagnosis(telemetry, live_analyzer, fleet, fleet_step,
+                          delta_sink, policy) -> Diagnosis | None:
+        """Map the deprecated kwarg combinations onto the facade,
+        preserving their exact semantics (including live_analyzer being
+        silently inert without a streaming telemetry)."""
         if fleet is not None and delta_sink is not None:
             raise ValueError(
                 "pass either an in-process fleet aggregator or a "
                 "delta_sink transport, not both"
             )
-        if fleet is not None or delta_sink is not None:
-            if telemetry is None or not telemetry.wire:
-                raise ValueError(
-                    "fleet aggregation needs StepTelemetry(wire=True)"
-                )
-        elif (
+        if fleet is not None:
+            return Diagnosis.fleet(
+                fleet, drive=fleet_step if fleet_step is not None else True,
+                policy=policy,
+            )
+        if delta_sink is not None:
+            return Diagnosis.forward(delta_sink, policy=policy)
+        if (
             live_analyzer is not None
             and telemetry is not None
             and telemetry.live_window is not None
         ):
-            self.diagnosis = RootCauseStream(live_analyzer, telemetry.live_window)
+            return Diagnosis.local(live_analyzer, policy=policy)
+        if policy is not None:
+            return Diagnosis(policy=policy)
+        return None
 
     def _decode_once(self, nxt, cache):
         """One decode step; splits a PRNG key only when sampling."""
@@ -179,23 +214,10 @@ class ServeEngine:
                         nxt, cache = self._decode_once(nxt, cache)
                         jax.block_until_ready(nxt)
                     scope.add("read_bytes", float(nxt.size * 4))
-                fresh: list = []
-                if self.fleet is not None:
-                    self.fleet.ingest_host(self.telemetry)
-                    if self.fleet_step:
-                        fresh = self.fleet.step()
-                elif self.delta_sink is not None:
-                    self.delta_sink.send(self.telemetry.drain_delta())
-                elif self.diagnosis is not None:
-                    fresh = self.diagnosis.step()
-                self.live_root_causes.extend(fresh)
-                if self.policy is not None:
-                    self.policy.step(
-                        fresh,
-                        step_time=time.time() - step_t0,
-                        live_hosts=(self.fleet.num_live_hosts
-                                    if self.fleet is not None else None),
-                    )
+                if self.diagnosis is not None:
+                    self.live_root_causes.extend(self.diagnosis.tick(
+                        self.telemetry, step_time=time.time() - step_t0,
+                    ))
             else:
                 nxt, cache = self._decode_once(nxt, cache)
             out = np.asarray(nxt[:, 0])

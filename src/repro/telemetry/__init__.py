@@ -5,6 +5,7 @@ mpstat/iostat/sar layer of the paper, re-homed onto an SPMD training host
 (DESIGN.md §2 mapping table).
 """
 from .events import (
+    ForwardedDelta,
     GcTimer,
     StageDelta,
     StepDelta,
@@ -13,13 +14,16 @@ from .events import (
 )
 from .sampler import SystemSampler, read_cpu_sample, read_disk_sample, read_net_sample
 from .timeline import ResourceTimeline, TimelineCursor
-from .transport import DeltaClient, DeltaServer, ShmRing
+from .transport import DeltaClient, DeltaServer, Endpoint, RingSender, ShmRing
 
 __all__ = [
     "DeltaClient",
     "DeltaServer",
+    "Endpoint",
+    "ForwardedDelta",
     "GcTimer",
     "ResourceTimeline",
+    "RingSender",
     "ShmRing",
     "StageDelta",
     "StepDelta",

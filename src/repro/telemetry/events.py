@@ -59,6 +59,7 @@ from .timeline import ResourceTimeline
 
 WIRE_V1_MAGIC = b"BRD1"
 WIRE_V2_MAGIC = b"BRD2"
+WIRE_FWD_MAGIC = b"BRDF"
 _WIRE_MAGIC = WIRE_V1_MAGIC  # back-compat alias
 
 #: Refuse headers claiming more than this many rows in one stage block —
@@ -481,6 +482,110 @@ class StepDelta:
             )
         return cls(header["host"], int(header["seq"]), stages,
                    boot=int(header.get("boot", 0)))
+
+
+#: Inner payload count cap per forwarded envelope — far above any real
+#: forward batch, and it bounds what a corrupt header can allocate.
+_MAX_FWD_PAYLOADS = 1 << 16
+
+#: Envelope-in-envelope nesting a consumer will unwrap before declaring
+#: the frame hostile.  A well-formed tree re-wraps at each hop (inner
+#: payloads are always leaf StepDeltas), so real depth is 1; the cap only
+#: bounds adversarial recursion.
+MAX_FORWARD_DEPTH = 8
+
+
+@dataclass
+class ForwardedDelta:
+    """A tree aggregator's pre-merged forwarded frame (wire magic
+    ``BRDF``): the envelope around the inner :class:`StepDelta` payloads
+    it accepted from its sub-fleet since its last forward.
+
+    The envelope is *re-stamped* with the aggregator's own identity —
+    ``host`` is the aggregator's fleet-unique name, ``(boot, seq)`` its
+    incarnation stamp and per-forward counter — so the upstream
+    consumer's ``(boot, seq)`` watermark dedups envelope redelivery
+    exactly as it dedups host deltas.  The inner payloads ride through
+    **verbatim** (the bytes the aggregator itself ingested, each keeping
+    its original producer stamp): the root therefore dedups at *both*
+    granularities, and a failed-over aggregator that re-forwards payloads
+    an earlier incarnation already delivered produces only inner-level
+    duplicate drops, never duplicate rows.  That per-payload exactness is
+    what makes depth-2 aggregation byte-identical to the star topology.
+
+    Wire layout (normative spec in ``docs/wire_format.md``)::
+
+        "BRDF" | u32 header length | JSON header | inner payloads, concatenated
+
+    with header ``{host, boot, seq, sizes: [len, ...]}``; every declared
+    size is validated against the remaining bytes before any slice is
+    taken, so a truncated or lying frame raises :class:`WireFormatError`.
+    """
+
+    host: str
+    seq: int
+    payloads: list[bytes]
+    boot: int = 0
+
+    @staticmethod
+    def is_forwarded(buf) -> bool:
+        """Cheap magic check (no decoding)."""
+        return bytes(buf[:4]) == WIRE_FWD_MAGIC
+
+    def to_bytes(self) -> bytes:
+        head = json.dumps(
+            {"host": self.host, "seq": self.seq, "boot": self.boot,
+             "sizes": [len(p) for p in self.payloads]},
+            separators=(",", ":"),
+        ).encode()
+        return b"".join(
+            [WIRE_FWD_MAGIC, struct.pack("<I", len(head)), head,
+             *map(bytes, self.payloads)]
+        )
+
+    @classmethod
+    def from_bytes(cls, buf) -> "ForwardedDelta":
+        buf = bytes(buf)
+        if len(buf) < 8 or buf[:4] != WIRE_FWD_MAGIC:
+            raise WireFormatError(
+                f"not a ForwardedDelta wire buffer (magic {bytes(buf[:4])!r})"
+            )
+        (hlen,) = struct.unpack_from("<I", buf, 4)
+        _need(len(buf), 8, hlen, "forwarded header")
+        try:
+            header = json.loads(buf[8 : 8 + hlen].decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise WireFormatError(f"corrupt ForwardedDelta header: {e}") from e
+        try:
+            host = header["host"]
+            if not isinstance(host, str):
+                raise TypeError("host is not a string")
+            seq = int(header["seq"])
+            boot = int(header.get("boot", 0))
+            sizes = header["sizes"]
+            if not isinstance(sizes, list) or not all(
+                isinstance(s, int) and s >= 0 for s in sizes
+            ):
+                raise TypeError("sizes is not a list of non-negative ints")
+        except (KeyError, TypeError, ValueError) as e:
+            raise WireFormatError(
+                f"ForwardedDelta header missing/malformed fields: {e}"
+            ) from e
+        if len(sizes) > _MAX_FWD_PAYLOADS:
+            raise WireFormatError(
+                f"implausible forwarded payload count {len(sizes)}"
+            )
+        off = 8 + hlen
+        payloads: list[bytes] = []
+        for i, size in enumerate(sizes):
+            _need(len(buf), off, size, f"forwarded payload {i}")
+            payloads.append(buf[off : off + size])
+            off += size
+        if off != len(buf):
+            raise WireFormatError(
+                f"ForwardedDelta frame has {len(buf) - off} trailing bytes"
+            )
+        return cls(host, seq, payloads, boot=boot)
 
 
 @dataclass

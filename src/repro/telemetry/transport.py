@@ -49,6 +49,7 @@ import threading
 import time
 import zlib
 from collections import OrderedDict
+from dataclasses import dataclass
 
 from .events import StepDelta, WireFormatError
 
@@ -67,25 +68,112 @@ class TransportError(RuntimeError):
     """A transport-layer failure (bad frame, oversized frame, closed peer)."""
 
 
+@dataclass(frozen=True)
+class Endpoint:
+    """A typed transport endpoint: ``tcp`` (host + port), ``unix`` (socket
+    path), or ``shm`` (shared-memory segment name).
+
+    This is the one wiring surface every transport role shares — host,
+    aggregator, and root all express "where do I listen / whom do I dial"
+    as an Endpoint instead of the historical stringly-typed address
+    tuples.  :meth:`parse` accepts every form the old ``parse_address``
+    did (``("host", port)`` tuples, ``"host:port"``, ``"unix:/path"``, a
+    bare path containing ``/``) plus the explicit ``tcp:host:port`` and
+    ``shm:name`` prefixes, and an Endpoint itself (idempotent), so string
+    forms keep working everywhere they ever did.
+
+    :meth:`listen` and :meth:`connect` are the factories the roles use
+    uniformly: ``listen`` binds a :class:`DeltaServer` (tcp/unix) or
+    creates a :class:`ShmRing` (shm); ``connect`` dials a
+    :class:`DeltaClient` (tcp/unix) or attaches a :class:`RingSender`
+    (shm).  ``str(endpoint)`` is the canonical advertisable form and
+    round-trips through :meth:`parse`.
+    """
+
+    kind: str                  # "tcp" | "unix" | "shm"
+    host: str = ""             # tcp only
+    port: int = 0              # tcp only
+    path: str = ""             # unix socket path or shm segment name
+
+    _KINDS = ("tcp", "unix", "shm")
+
+    def __post_init__(self) -> None:
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown endpoint kind {self.kind!r}")
+
+    @classmethod
+    def parse(cls, value) -> "Endpoint":
+        """Normalize any accepted address form into an Endpoint."""
+        if isinstance(value, Endpoint):
+            return value
+        if isinstance(value, tuple) and len(value) == 2:
+            host, port = value
+            return cls("tcp", host=str(host), port=int(port))
+        if isinstance(value, str) and value:
+            if value.startswith("unix:"):
+                return cls("unix", path=value[len("unix:"):])
+            if value.startswith("shm:"):
+                return cls("shm", path=value[len("shm:"):])
+            if value.startswith("tcp:"):
+                value = value[len("tcp:"):]
+                if ":" not in value:
+                    raise ValueError(f"tcp endpoint needs host:port, got {value!r}")
+            if ":" in value and not value.startswith("/"):
+                host, _, port = value.rpartition(":")
+                return cls("tcp", host=host or "127.0.0.1", port=int(port))
+            if "/" in value:
+                return cls("unix", path=value)
+        raise ValueError(f"unparseable transport address {value!r}")
+
+    def __str__(self) -> str:
+        if self.kind == "tcp":
+            return f"{self.host}:{self.port}"
+        return f"{self.kind}:{self.path}"
+
+    # -- socket plumbing ----------------------------------------------------
+    @property
+    def family(self) -> int:
+        if self.kind == "tcp":
+            return socket.AF_INET
+        if self.kind == "unix":
+            return socket.AF_UNIX
+        raise ValueError("shm endpoints have no socket family")
+
+    @property
+    def sockaddr(self):
+        if self.kind == "tcp":
+            return (self.host, self.port)
+        if self.kind == "unix":
+            return self.path
+        raise ValueError("shm endpoints have no socket address")
+
+    # -- role factories -----------------------------------------------------
+    def listen(self, **kwargs):
+        """Bind the listening side: a :class:`DeltaServer` for tcp/unix, a
+        created :class:`ShmRing` for shm (kwargs pass through)."""
+        if self.kind == "shm":
+            return ShmRing.create(name=self.path or None, **kwargs)
+        return DeltaServer(self, **kwargs)
+
+    def connect(self, **kwargs):
+        """Dial the producing side: a :class:`DeltaClient` for tcp/unix, a
+        :class:`RingSender` over an attached :class:`ShmRing` for shm."""
+        if self.kind == "shm":
+            return RingSender(ShmRing.attach(self.path), **kwargs)
+        return DeltaClient(self, **kwargs)
+
+
 def parse_address(address) -> tuple[int, object]:
     """Normalize an address to ``(socket family, sockaddr)``.
 
-    ``("host", port)`` tuples and ``"host:port"`` strings are TCP
-    (``AF_INET``); ``"unix:/path"`` (or a bare path containing ``/``) is a
-    Unix-domain socket (``AF_UNIX``).
+    Back-compat shim over :meth:`Endpoint.parse`: ``("host", port)``
+    tuples and ``"host:port"`` strings are TCP (``AF_INET``);
+    ``"unix:/path"`` (or a bare path containing ``/``) is a Unix-domain
+    socket (``AF_UNIX``).  ``shm:`` endpoints have no socket family and
+    raise ``ValueError`` here — use :class:`Endpoint` directly.
     """
-    if isinstance(address, tuple):
-        host, port = address
-        return socket.AF_INET, (str(host), int(port))
-    if isinstance(address, str):
-        if address.startswith("unix:"):
-            return socket.AF_UNIX, address[len("unix:"):]
-        if ":" in address and not address.startswith("/"):
-            host, _, port = address.rpartition(":")
-            return socket.AF_INET, (host or "127.0.0.1", int(port))
-        if "/" in address:
-            return socket.AF_UNIX, address
-    raise ValueError(f"unparseable transport address {address!r}")
+    ep = Endpoint.parse(address)
+    return ep.family, ep.sockaddr
 
 
 def _recv_exact(sock: socket.socket, count: int) -> bytes | None:
@@ -137,19 +225,41 @@ class DeltaServer:
         server.drain_into(aggregator)
         for cause in aggregator.step(): ...
 
-    ``address`` accepts the forms of :func:`parse_address`.  A Unix-socket
-    path is unlinked on :meth:`close`.
+    ``address`` accepts every form of :meth:`Endpoint.parse`.  A
+    Unix-socket path is unlinked on :meth:`close`.
+
+    Ack timing (``ack``): ``"enqueue"`` (default) acknowledges a DATA
+    frame the moment it is queued in server-process memory — "durable as
+    long as the aggregator process lives".  ``"drain"`` defers the ack
+    until :meth:`drain_into` has *ingested* the payload, so an aggregator
+    that journals on ingest upgrades the ack to "durable across my own
+    restart" — the HA contract a tree aggregator gives its children
+    (plain :meth:`drain` in this mode acks on pop, since the caller took
+    ownership).  In drain mode acks are sent from the draining thread;
+    the per-connection reader threads never write, so no send lock is
+    needed in either mode.
     """
 
-    def __init__(self, address, *, backlog: int = 16) -> None:
-        self.family, sockaddr = parse_address(address)
+    def __init__(self, address, *, backlog: int = 16,
+                 ack: str = "enqueue") -> None:
+        if ack not in ("enqueue", "drain"):
+            raise ValueError(f"unknown ack mode {ack!r}")
+        self.ack_mode = ack
+        self.endpoint = Endpoint.parse(address)
+        self.family = self.endpoint.family
         self._sock = socket.socket(self.family, socket.SOCK_STREAM)
         if self.family == socket.AF_INET:
             self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._sock.bind(sockaddr)
+        self._sock.bind(self.endpoint.sockaddr)
         self._sock.listen(backlog)
         self.address = self._sock.getsockname()
-        self._queue: queue.Queue[bytes] = queue.Queue()
+        if self.endpoint.kind == "tcp":
+            # Re-anchor on the *bound* port (port 0 = ephemeral).
+            self.endpoint = Endpoint("tcp", host=self.address[0],
+                                     port=self.address[1])
+        # Items are (payload, ack) where ack is None (already acked at
+        # enqueue) or a zero-arg callable sending the deferred ack.
+        self._queue: queue.Queue[tuple[bytes, object]] = queue.Queue()
         self._closed = False
         self._conns: list[socket.socket] = []
         self._lock = threading.Lock()
@@ -194,10 +304,13 @@ class DeltaServer:
                     return  # protocol violation: drop the connection
                 boot, seq = _BOOT_SEQ.unpack_from(body, 0)
                 payload = body[_BOOT_SEQ.size:]
-                self._queue.put(payload)
+                if self.ack_mode == "enqueue":
+                    self._queue.put((payload, None))
+                    _send_frame(conn, FRAME_ACK, _BOOT_SEQ.pack(boot, seq))
+                else:
+                    self._queue.put((payload, self._deferred_ack(conn, boot, seq)))
                 self.frames_received += 1
                 self.bytes_received += len(payload)
-                _send_frame(conn, FRAME_ACK, _BOOT_SEQ.pack(boot, seq))
         except (TransportError, OSError):
             self.frame_errors += 1
         finally:
@@ -207,31 +320,58 @@ class DeltaServer:
             conn.close()
 
     # -- driver-thread surface ---------------------------------------------
+    @staticmethod
+    def _deferred_ack(conn: socket.socket, boot: int, seq: int):
+        def send_ack() -> None:
+            try:
+                _send_frame(conn, FRAME_ACK, _BOOT_SEQ.pack(boot, seq))
+            except OSError:
+                pass  # dead connection: the client will resend on reconnect
+        return send_ack
+
     @property
     def pending(self) -> int:
         return self._queue.qsize()
 
     def drain(self, max_payloads: int | None = None) -> list[bytes]:
-        """Pop queued delta payloads (all of them by default)."""
+        """Pop queued delta payloads (all of them by default).  In
+        ``ack="drain"`` mode each popped payload is acked here — the
+        caller took ownership; use :meth:`drain_into` to defer acks past
+        ingest instead."""
         out: list[bytes] = []
         while max_payloads is None or len(out) < max_payloads:
             try:
-                out.append(self._queue.get_nowait())
+                payload, ack = self._queue.get_nowait()
             except queue.Empty:
                 break
+            out.append(payload)
+            if ack is not None:
+                ack()
         return out
 
     def drain_into(self, aggregator, max_payloads: int | None = None) -> int:
         """Ingest every queued payload into ``aggregator`` (its
         ``(boot, seq)`` dedup makes replayed frames free).  A payload that
         fails wire validation is dropped and counted in ``frame_errors``
-        rather than poisoning the tick.  Returns rows ingested."""
+        rather than poisoning the tick (and still acked — it would be
+        corrupt on every redelivery too).  In ``ack="drain"`` mode the ack
+        goes out only after ``ingest`` returned, so an aggregator that
+        journals inside ingest never acks a payload it could lose.
+        Returns rows ingested."""
         rows = 0
-        for payload in self.drain(max_payloads):
+        n = 0
+        while max_payloads is None or n < max_payloads:
+            try:
+                payload, ack = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            n += 1
             try:
                 rows += aggregator.ingest(payload)
             except WireFormatError:
                 self.frame_errors += 1
+            if ack is not None:
+                ack()
         return rows
 
     def close(self) -> None:
@@ -300,7 +440,8 @@ class DeltaClient:
         retry_interval: float = 0.2,
         send_timeout: float = 5.0,
     ) -> None:
-        self.family, self.sockaddr = parse_address(address)
+        self.endpoint = Endpoint.parse(address)
+        self.family, self.sockaddr = self.endpoint.family, self.endpoint.sockaddr
         self.wire_version = int(wire_version)
         self.resend_cap = int(resend_cap)
         self.connect_timeout = float(connect_timeout)
@@ -319,12 +460,24 @@ class DeltaClient:
         self.acks_received = 0
         self.reconnects = 0
         self.resend_drops = 0
+        # (boot, seq) keys acked since the last take_acks() — how a tree
+        # aggregator learns which forwarded envelopes its parent durably
+        # accepted.  Bounded: nobody draining must not leak.
+        self._ack_history: list[tuple[int, int]] = []
 
     # -- public surface ----------------------------------------------------
     @property
     def unacked(self) -> int:
         with self._lock:
             return len(self._unacked)
+
+    def take_acks(self) -> list[tuple[int, int]]:
+        """Drain the ``(boot, seq)`` keys acked since the last call, in
+        ack order.  A tree aggregator polls this each tick to retire its
+        forwarded envelopes from the journal."""
+        with self._lock:
+            out, self._ack_history = self._ack_history, []
+        return out
 
     def send(self, delta: StepDelta) -> bool:
         """Buffer + transmit one delta; returns True if it went out on a
@@ -473,6 +626,8 @@ class DeltaClient:
                             break
                         self._unacked.popitem(last=False)
                         self.acks_received += 1
+                        self._ack_history.append(k)
+                    del self._ack_history[: -4 * self.resend_cap or None]
                     self._acked.notify_all()
         except (TransportError, OSError):
             pass
@@ -571,6 +726,12 @@ class ShmRing:
     @property
     def name(self) -> str:
         return self._shm.name
+
+    @property
+    def endpoint(self) -> Endpoint:
+        """This ring as a typed endpoint (``shm:<segment name>``) — the
+        advertisable form a producer hands to :meth:`Endpoint.connect`."""
+        return Endpoint("shm", path=self._shm.name)
 
     # -- cursors -----------------------------------------------------------
     def _head(self) -> int:
@@ -706,7 +867,17 @@ class RingSender:
         self.shed = 0
 
     def send(self, delta: StepDelta) -> bool:
-        payload = delta.to_bytes(version=self.wire_version)
+        return self.send_bytes(
+            delta.to_bytes(version=self.wire_version), delta.boot, delta.seq
+        )
+
+    def send_bytes(self, payload: bytes, boot: int, seq: int) -> bool:
+        """Pre-serialized payload push (surface parity with
+        :meth:`DeltaClient.send_bytes` so tree aggregators treat socket
+        and ring parents uniformly).  ``(boot, seq)`` ride inside the
+        payload; a successful push *is* the delivery — there is no ack
+        channel, so consumers treating the return value as the ack get
+        at-most-once on shed, exactly the ring's contract."""
         if self.ring.push(payload):
             return True
         time.sleep(self.retry)

@@ -92,6 +92,17 @@ class TestArchitectureDoc:
                        "guardrail"):
             assert needle in text
 
+    def test_fan_in_tree_hop(self):
+        """The tree-topology hop diagram (ISSUE 7): the architecture doc
+        must keep the fan-in layer and its two load-bearing invariants."""
+        text = _read(ARCH)
+        for needle in ("fan-in tree hop", "TreeAggregator",
+                       "ForwardedDelta", "BRDF", "AggregatorJournal",
+                       'ack="drain"', "Verbatim inner payloads",
+                       "Failover = redelivery", "duplicate_drops",
+                       "byte-identical to star"):
+            assert needle in text, f"architecture.md lost {needle!r}"
+
     def test_dotted_references_resolve(self):
         missing = [d for d in sorted(set(DOTTED.findall(_read(ARCH))))
                    if not _resolves(d)]
@@ -113,6 +124,16 @@ class TestWireFormatDoc:
     def test_both_versions_specified(self):
         text = _read(WIRE)
         assert "Version 1" in text and "Version 2" in text
+
+    def test_forwarded_envelope_specified(self):
+        """The BRDF forwarded-delta frame (ISSUE 7) is normative too: an
+        implementer must find the magic, header fields, depth cap, and
+        the dual-granularity dedup rule here."""
+        text = _read(WIRE)
+        for needle in ("Forwarded delta envelopes", "BRDF",
+                       "ForwardedDelta", "sizes", "MAX_FORWARD_DEPTH",
+                       "is_forwarded", "verbatim", "envelope"):
+            assert needle in text, f"wire_format.md lost {needle!r}"
 
     def test_dotted_references_resolve(self):
         missing = [d for d in sorted(set(DOTTED.findall(_read(WIRE))))
@@ -151,6 +172,18 @@ class TestOperationsDoc:
                 f"operations.md lost {needle!r}"
             )
 
+    def test_fan_in_tree_deployment_section(self):
+        """The tree deployment guide (ISSUE 7) must keep the parts an
+        operator needs: role wiring flags, fanout sizing, journal
+        placement, and the adaptive lease formula's knobs."""
+        text = _read(OPS)
+        for needle in ("Deploying a fan-in tree", "--fleet-role",
+                       "--fleet-parent", "--fleet-journal", "fanout",
+                       "journal", "Compaction", "effective_lease",
+                       "lease_ceiling", "lease_multiplier",
+                       "Diagnosis", "DeprecationWarning"):
+            assert needle in text, f"operations.md lost {needle!r}"
+
     def test_readme_links_here_for_rebaseline(self):
         """The re-baseline workflow moved here; the README must keep a
         pointer instead of a divergent copy."""
@@ -178,6 +211,17 @@ class TestHelpMatchesDocs:
         ("repro.core.BigRootsAnalyzer.analyze_fleet", ("batched", "backend")),
         ("repro.serve.FleetAggregator", ("StepDelta", "merged", "step",
                                          "lease", "dark")),
+        ("repro.serve.TreeAggregator", ("forward", "verbatim", "journal",
+                                        "boot", "recover")),
+        ("repro.serve.Diagnosis", ("local", "fleet", "forward",
+                                   "ServeEngine", "tick")),
+        ("repro.serve.AggregatorJournal", ("snapshot", "compact",
+                                           "recover", "unacked",
+                                           "watermark")),
+        ("repro.telemetry.ForwardedDelta", ("BRDF", "envelope", "verbatim",
+                                            "re-stamp", "duplicate")),
+        ("repro.telemetry.Endpoint", ("tcp", "unix", "shm", "parse",
+                                      "listen", "connect")),
         ("repro.telemetry.StepDelta", ("wire", "stage")),
         ("repro.telemetry.StepTelemetry.drain_delta", ("present", "drain")),
         ("repro.telemetry.StepDelta.to_bytes", ("version", "deflate",

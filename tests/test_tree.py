@@ -1,0 +1,591 @@
+"""Hierarchical tree aggregation + aggregator HA + the Diagnosis facade.
+
+Pins the tentpole properties of the fan-in tree:
+
+- depth-2 (and depth-3) tree ingestion is **byte-identical** to star
+  ingestion of the same payload bytes — cause stream, merged windows,
+  row/dedup counters — on both a deterministic straggler workload and
+  randomized sparse/dense deltas;
+- an aggregator that dies with journaled-but-unacked payloads resumes
+  from its journal: watermarks/EWMAs/windows restore, the unacked tail
+  re-forwards under the new boot, and the root absorbs the redelivery as
+  inner duplicate drops — zero lost, zero duplicated rows;
+- journal compaction (snapshot + keep-set) round-trips through recovery,
+  and a torn tail (SIGKILL mid-append) is tolerated;
+- the adaptive per-host lease: EWMA of inter-delta cadence, floored at
+  ``lease``, capped at ``lease_ceiling`` (default 10× floor), with
+  rejoin gaps and recovery replay excluded from learning;
+- :class:`~repro.telemetry.transport.Endpoint` parsing of every
+  historical address form plus the explicit prefixes;
+- the :class:`~repro.serve.Diagnosis` facade: one-mode validation,
+  telemetry binding errors, per-mode tick behavior, and the
+  ``ServeEngine`` deprecation shims (old kwargs warn but work; mixing
+  old and new raises).
+"""
+from __future__ import annotations
+
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import BigRootsAnalyzer, JAX_FEATURES
+from repro.serve import Diagnosis, ServeEngine
+from repro.serve.fleet import FleetAggregator, TreeAggregator
+from repro.telemetry.events import (
+    ForwardedDelta,
+    StageDelta,
+    StepDelta,
+    StepTelemetry,
+)
+from repro.telemetry.transport import DeltaServer, Endpoint
+
+
+def make_delta(host, seq, t, boot=1, n=8, cpu=0.2, dur=1.0, stage="s0"):
+    return StepDelta(host, seq, [StageDelta(
+        stage, [f"{host}/t{seq}-{i}" for i in range(n)], [host] * n,
+        np.full(n, float(t)), np.full(n, float(t) + float(dur)),
+        np.zeros(n, np.int16),
+        {"cpu": np.full(n, float(cpu))}, {"cpu": np.ones(n, bool)})],
+        boot=boot)
+
+
+def straggler_round(hosts, step):
+    """One delta per host for one step; h1 runs 2.6× long and CPU-bound
+    (the same shape examples/fleet_demo.py uses)."""
+    out = []
+    for i in range(hosts):
+        slow = i == 1 and step % 8 < 2
+        out.append(make_delta(
+            f"h{i}", step + 1, float(step) * 3.0,
+            cpu=0.95 if slow else 0.2, dur=2.6 if slow else 1.0,
+        ))
+    return out
+
+
+class Pipe:
+    """Ack-less parent: a successful push is the delivery (shm-ring
+    semantics) — no ``take_acks`` attribute on purpose."""
+
+    def __init__(self) -> None:
+        self.sent: list[bytes] = []
+
+    def send_bytes(self, payload: bytes, boot: int, seq: int) -> bool:
+        self.sent.append(payload)
+        return True
+
+
+class NeverAcks:
+    """Parent that accepts pushes but never acknowledges — what a dead
+    or partitioned root looks like to a journaling aggregator."""
+
+    def __init__(self) -> None:
+        self.sent: list[bytes] = []
+
+    def send_bytes(self, payload: bytes, boot: int, seq: int) -> bool:
+        self.sent.append(payload)
+        return True
+
+    def take_acks(self):
+        return []
+
+
+class CollectSink:
+    """A forward-mode sink: the ``send(delta)`` protocol of DeltaClient
+    and RingSender."""
+
+    def __init__(self) -> None:
+        self.sent: list = []
+
+    def send(self, delta) -> bool:
+        self.sent.append(delta)
+        return True
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+
+def cause_fields(c) -> tuple:
+    return (c.task_id, c.stage_id, c.node, c.feature, c.kind, c.value,
+            c.peer_groups, c.guidance, c.severity)
+
+
+def fresh_root(**kw) -> TreeAggregator:
+    """A root with the window-export surface (no parent, no journal —
+    behaves exactly like a FleetAggregator)."""
+    return TreeAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES),
+                          name="root", **kw)
+
+
+class TestTreeEqualsStar:
+    def _run_tree(self, rounds, fan):
+        """Ingest ``rounds`` (lists of raw payloads) through ``fan``
+        mid-tier aggregators into a fresh root; step each round."""
+        root = fresh_root()
+        pipes = [Pipe() for _ in range(fan)]
+        aggs = [
+            TreeAggregator(JAX_FEATURES, name=f"agg{j}", parent=pipes[j])
+            for j in range(fan)
+        ]
+        causes = []
+        for payloads in rounds:
+            per = max(1, len(payloads) // fan)
+            for k, raw in enumerate(payloads):
+                aggs[min(k // per, fan - 1)].ingest(raw)
+            for j, a in enumerate(aggs):
+                a.pump()
+                for env in pipes[j].sent:
+                    root.ingest(env)
+                pipes[j].sent.clear()
+            causes.extend(root.step())
+        return root, causes
+
+    def _run_star(self, rounds):
+        root = fresh_root()
+        causes = []
+        for payloads in rounds:
+            for raw in payloads:
+                root.ingest(raw)
+            causes.extend(root.step())
+        return root, causes
+
+    def test_straggler_causes_byte_identical(self):
+        rounds = [
+            [d.to_bytes() for d in straggler_round(4, s)] for s in range(12)
+        ]
+        star, star_causes = self._run_star(rounds)
+        tree, tree_causes = self._run_tree(rounds, fan=2)
+        assert star_causes, "workload produced no causes to compare"
+        assert ([cause_fields(c) for c in tree_causes]
+                == [cause_fields(c) for c in star_causes])
+        assert tree.rows_ingested == star.rows_ingested
+        assert tree.duplicate_drops == star.duplicate_drops == 0
+        assert tree._export_windows() == star._export_windows()
+        # Leaf watermarks at the root are topology-independent; the tree
+        # root additionally tracks the aggregator envelopes.
+        for h in ("h0", "h1", "h2", "h3"):
+            assert tree.host_seq[h] == star.host_seq[h]
+        assert "agg0" in tree.host_seq and "agg1" in tree.host_seq
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_randomized_payloads_byte_identical(self, seed):
+        from test_transport import random_delta
+
+        rng = np.random.default_rng(seed)
+        rounds = []
+        for s in range(6):
+            rounds.append([
+                random_delta(rng, host=f"h{i}", seq=s + 1).to_bytes()
+                for i in range(4)
+            ])
+        star, _ = self._run_star(rounds)
+        tree, _ = self._run_tree(rounds, fan=2)
+        assert tree.rows_ingested == star.rows_ingested
+        assert tree._export_windows() == star._export_windows()
+
+    def test_depth_three_chain_stays_flat(self):
+        """agg0 → agg1 → root: the mid tier re-forwards the *leaf*
+        payloads verbatim (never nests envelopes), so the root result is
+        still byte-identical to star and no depth limit is approached."""
+        rounds = [
+            [d.to_bytes() for d in straggler_round(3, s)] for s in range(10)
+        ]
+        star, star_causes = self._run_star(rounds)
+
+        root = fresh_root()
+        up = Pipe()
+        mid = TreeAggregator(JAX_FEATURES, name="agg1", parent=up)
+        low_pipe = Pipe()
+        low = TreeAggregator(JAX_FEATURES, name="agg0", parent=low_pipe)
+        causes = []
+        for payloads in rounds:
+            for raw in payloads:
+                low.ingest(raw)
+            low.pump()
+            for env in low_pipe.sent:
+                assert ForwardedDelta.is_forwarded(env)
+                mid.ingest(env)
+            low_pipe.sent.clear()
+            mid.pump()
+            for env in up.sent:
+                # the re-envelope carries leaf payloads, not envelopes
+                inner = ForwardedDelta.from_bytes(env)
+                assert all(not ForwardedDelta.is_forwarded(p)
+                           for p in inner.payloads)
+                root.ingest(env)
+            up.sent.clear()
+            causes.extend(root.step())
+        assert ([cause_fields(c) for c in causes]
+                == [cause_fields(c) for c in star_causes])
+        assert root._export_windows() == star._export_windows()
+        assert root.rows_ingested == star.rows_ingested
+
+
+class TestJournalHA:
+    def _journaled(self, tmp_path, parent, **kw):
+        return TreeAggregator(
+            JAX_FEATURES, name="agg0", parent=parent,
+            journal=str(tmp_path / "agg0.journal"), **kw,
+        )
+
+    def test_crash_restart_loses_nothing(self, tmp_path):
+        """Die with sent-but-unacked envelopes; the reborn aggregator
+        replays its journal, re-forwards under the new boot, and the
+        root's inner dedup absorbs the redelivered overlap exactly."""
+        parent = NeverAcks()
+        a1 = self._journaled(tmp_path, parent)
+        rounds = [straggler_round(2, s) for s in range(6)]
+        for payloads in rounds:
+            for d in payloads:
+                a1.ingest(d.to_bytes())
+            a1.pump()
+        assert a1.pending_forwards == 12  # everything in flight, no acks
+        # crash: no close(), no flush — the journal is all that survives
+
+        a2 = self._journaled(tmp_path, Pipe())
+        assert a2.recovered_payloads == 12
+        assert a2.pending_forwards == 12
+        assert a2.host_seq["h0"] == a1.host_seq["h0"]
+        assert a2.host_seq["h1"] == a1.host_seq["h1"]
+        assert a2._export_windows() == a1._export_windows()
+        assert a2.boot != a1.boot
+        a2.pump()
+        assert a2.pending_forwards == 0  # Pipe acks on push
+
+        # Root sees the pre-crash sends AND the post-recovery re-sends.
+        root = fresh_root()
+        for env in parent.sent + a2.parent.sent:
+            root.ingest(env)
+        assert root.rows_ingested == 2 * 6 * 8   # hosts × steps × rows
+        assert root.duplicate_drops == 12        # every payload redelivered
+        assert root.host_restarts >= 1           # agg0's new boot observed
+
+    def test_acked_payloads_not_replayed(self, tmp_path):
+        parent = Pipe()  # push-is-ack
+        a1 = self._journaled(tmp_path, parent)
+        for d in straggler_round(2, 0):
+            a1.ingest(d.to_bytes())
+        a1.pump()
+        assert a1.pending_forwards == 0
+        a2 = self._journaled(tmp_path, Pipe())
+        assert a2.recovered_payloads == 0
+        assert a2.pending_forwards == 0
+        a2.pump()
+        assert a2.parent.sent == []
+        # ...but the state still recovered: duplicates stay duplicates.
+        before = a2.rows_ingested
+        for d in straggler_round(2, 0):
+            a2.ingest(d.to_bytes())
+        assert a2.rows_ingested == before
+        assert a2.duplicate_drops == 2
+
+    def test_compaction_shrinks_once_acked(self, tmp_path):
+        a1 = self._journaled(tmp_path, Pipe())  # push-is-ack parent
+        for s in range(8):
+            for d in straggler_round(3, s):
+                a1.ingest(d.to_bytes())
+        a1.pump()
+        size_before = a1.journal.size
+        a1.compact_journal()
+        # nothing unacked to retain: one snapshot + window image replaces
+        # 24 payload records and their forward/ack bookkeeping
+        assert a1.journal.size < size_before
+        a2 = self._journaled(tmp_path, Pipe())
+        assert a2._export_windows() == a1._export_windows()
+        assert a2.pending_forwards == 0
+
+    def test_compaction_round_trips(self, tmp_path):
+        a1 = self._journaled(tmp_path, NeverAcks())
+        for s in range(8):
+            for d in straggler_round(3, s):
+                a1.ingest(d.to_bytes())
+        a1.pump()
+        a1.compact_journal()
+        windows = a1._export_windows()
+        a2 = self._journaled(tmp_path, Pipe())
+        assert a2._export_windows() == windows
+        assert a2.host_seq == a1.host_seq
+        assert a2.pending_forwards == 24  # unacked set survives compaction
+
+    def test_torn_journal_tail_tolerated(self, tmp_path):
+        a1 = self._journaled(tmp_path, NeverAcks())
+        for d in straggler_round(2, 0):
+            a1.ingest(d.to_bytes())
+        path = tmp_path / "agg0.journal"
+        intact = path.read_bytes()
+        # SIGKILL mid-append: half a record of the second payload.
+        path.write_bytes(intact[: len(intact) - len(intact) // 4])
+        a2 = self._journaled(tmp_path, Pipe())
+        assert a2.recovered_payloads >= 1  # the intact prefix came back
+        assert a2.rows_ingested >= 8
+
+    def test_recovery_keeps_ewma_and_regrants_grace(self, tmp_path):
+        clock = FakeClock()
+        a1 = TreeAggregator(
+            JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES), name="agg0",
+            parent=NeverAcks(), journal=str(tmp_path / "j"), lease=1.0,
+            lease_ceiling=100.0, clock=clock,
+        )
+        for s in range(5):  # learned cadence: one delta per 5s
+            clock.t = s * 5.0
+            a1.ingest(make_delta("h0", s + 1, clock.t).to_bytes())
+        learned = a1.effective_lease("h0")
+        assert learned == pytest.approx(4.0 * 5.0)
+        a1.compact_journal()  # the EWMA rides the snapshot state
+        # two more deltas land after the snapshot: they will be *replayed*
+        # at recovery, back-to-back — and must not poison the cadence
+        for s in (5, 6):
+            clock.t = s * 5.0
+            a1.ingest(make_delta("h0", s + 1, clock.t).to_bytes())
+
+        clock.t = 120.0  # long downtime before the restart
+        a2 = TreeAggregator(
+            JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES), name="agg0",
+            parent=Pipe(), journal=str(tmp_path / "j"), lease=1.0,
+            lease_ceiling=100.0, clock=clock,
+        )
+        # cadence EWMA survived; replaying the journal did not poison it
+        assert a2.effective_lease("h0") == pytest.approx(learned)
+        # ...and the silent host is NOT paged on the first post-restart
+        # tick: its last-seen re-anchored to the restart instant.
+        assert not [c for c in a2.step()
+                    if c.feature == "host_dropout"]
+        clock.t = 120.0 + learned + 1.0  # now the lease really lapses
+        assert [c for c in a2.step() if c.feature == "host_dropout"]
+
+
+class TestAdaptiveLease:
+    def _agg(self, **kw):
+        clock = FakeClock()
+        kw.setdefault("lease", 2.0)
+        return FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES),
+                               clock=clock, **kw), clock
+
+    def test_fast_host_stays_on_floor(self):
+        agg, clock = self._agg()
+        for s in range(10):
+            clock.t = s * 0.1
+            agg.ingest(make_delta("h0", s + 1, clock.t))
+        assert agg.effective_lease("h0") == pytest.approx(2.0)
+
+    def test_slow_host_earns_longer_lease(self):
+        agg, clock = self._agg()
+        for s in range(10):
+            clock.t = s * 5.0
+            agg.ingest(make_delta("h0", s + 1, clock.t))
+        assert agg.effective_lease("h0") == pytest.approx(20.0)  # 4×cadence
+        # ...and the host is not declared dark inside that window
+        clock.t = 45.0 + 15.0
+        assert not [c for c in agg.step() if c.feature == "host_dropout"]
+        clock.t = 45.0 + 21.0
+        assert [c for c in agg.step() if c.feature == "host_dropout"]
+
+    def test_ceiling_caps_learned_lease(self):
+        agg, clock = self._agg(lease_ceiling=8.0)
+        for s in range(10):
+            clock.t = s * 60.0
+            agg.ingest(make_delta("h0", s + 1, clock.t))
+        assert agg.effective_lease("h0") == pytest.approx(8.0)
+
+    def test_default_ceiling_is_ten_floors(self):
+        agg, clock = self._agg()
+        for s in range(10):
+            clock.t = s * 60.0
+            agg.ingest(make_delta("h0", s + 1, clock.t))
+        assert agg.effective_lease("h0") == pytest.approx(20.0)
+
+    def test_unknown_host_gets_floor(self):
+        agg, _ = self._agg()
+        assert agg.effective_lease("nobody") == pytest.approx(2.0)
+
+    def test_rejoin_gap_excluded_from_ewma(self):
+        agg, clock = self._agg()
+        for s in range(6):
+            clock.t = s * 1.0
+            agg.ingest(make_delta("h0", s + 1, clock.t))
+        before = agg.effective_lease("h0")
+        clock.t = 300.0
+        agg.step()  # lease lapses: dropout synthesized, host marked dark
+        assert agg.host_dropouts == 1
+        agg.ingest(make_delta("h0", 7, clock.t))  # rejoin after 294s
+        assert agg.host_rejoins == 1
+        # the outage gap must not have been averaged into the cadence
+        assert agg.effective_lease("h0") == pytest.approx(before)
+
+
+class TestEndpoint:
+    @pytest.mark.parametrize("value, kind, canon", [
+        (("127.0.0.1", 9100), "tcp", "127.0.0.1:9100"),
+        ("127.0.0.1:9100", "tcp", "127.0.0.1:9100"),
+        ("tcp:10.0.0.1:80", "tcp", "10.0.0.1:80"),
+        ("unix:/tmp/agg.sock", "unix", "unix:/tmp/agg.sock"),
+        ("/tmp/agg.sock", "unix", "unix:/tmp/agg.sock"),
+        ("shm:ring0", "shm", "shm:ring0"),
+    ])
+    def test_parse_forms_and_canonical_string(self, value, kind, canon):
+        ep = Endpoint.parse(value)
+        assert ep.kind == kind
+        assert str(ep) == canon
+        again = Endpoint.parse(str(ep))
+        assert again == ep
+
+    def test_parse_idempotent_on_endpoint(self):
+        ep = Endpoint("tcp", host="h", port=1)
+        assert Endpoint.parse(ep) is ep
+
+    @pytest.mark.parametrize("bad", ["", "justaname", "tcp:nohostport", 42])
+    def test_unparseable_raises(self, bad):
+        with pytest.raises(ValueError):
+            Endpoint.parse(bad)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            Endpoint("carrier-pigeon", path="x")
+
+    def test_shm_has_no_socket_face(self):
+        ep = Endpoint.parse("shm:ring0")
+        with pytest.raises(ValueError):
+            _ = ep.family
+        with pytest.raises(ValueError):
+            _ = ep.sockaddr
+
+    def test_listen_connect_round_trip(self, tmp_path):
+        ep = Endpoint.parse(f"unix:{tmp_path}/e.sock")
+        with ep.listen() as server:
+            client = ep.connect()
+            client.send(make_delta("h0", 1, 0.0))
+            assert client.flush(10.0)
+            agg = FleetAggregator(JAX_FEATURES)
+            assert server.drain_into(agg) == 8
+            client.close()
+
+
+class _DummyModel:
+    """ServeEngine only closes jitted lambdas over the model at
+    construction; nothing traces until run()."""
+
+    def prefill(self, params, batch, cache):  # pragma: no cover
+        raise NotImplementedError
+
+    def decode(self, params, tokens, cache):  # pragma: no cover
+        raise NotImplementedError
+
+
+class TestDiagnosisFacade:
+    def test_exactly_one_mode_required(self):
+        with pytest.raises(ValueError):
+            Diagnosis(analyzer=object(), aggregator=object())
+        with pytest.raises(ValueError):
+            Diagnosis()
+        assert Diagnosis(policy=object()).mode == "policy"
+
+    def test_mode_names(self):
+        assert Diagnosis.local(BigRootsAnalyzer(JAX_FEATURES)).mode == "local"
+        assert Diagnosis.fleet(fresh_root()).mode == "fleet"
+        assert Diagnosis.forward(CollectSink()).mode == "forward"
+
+    def test_bind_validates_telemetry(self):
+        with pytest.raises(ValueError, match="StepTelemetry to consume"):
+            Diagnosis.fleet(fresh_root()).bind(None)
+        with pytest.raises(ValueError, match="wire=True"):
+            Diagnosis.fleet(fresh_root()).bind(StepTelemetry("h0"))
+        with pytest.raises(ValueError, match="streaming=True"):
+            Diagnosis.local(
+                BigRootsAnalyzer(JAX_FEATURES)
+            ).bind(StepTelemetry("h0"))
+
+    def _one_step(self, telem):
+        with telem.step(0) as s:
+            with s.phase("compute"):
+                pass
+            s.add("cpu", 0.5)
+
+    def test_fleet_tick_ingests_and_drives(self):
+        agg = fresh_root()
+        diag = Diagnosis.fleet(agg)
+        telem = StepTelemetry("h0", wire=True)
+        self._one_step(telem)
+        diag.tick(telem)
+        assert agg.rows_ingested == 1
+        assert agg.stream.steps == 1
+
+    def test_non_driving_fleet_party_still_pumps(self):
+        pipe = Pipe()
+        agg = TreeAggregator(JAX_FEATURES, name="agg0", parent=pipe)
+        diag = Diagnosis.fleet(agg, drive=False)
+        telem = StepTelemetry("h0", wire=True)
+        self._one_step(telem)
+        assert diag.tick(telem) == []
+        assert agg.stream.steps == 0       # nobody ran the sweep
+        assert len(pipe.sent) == 1         # ...but the forward went out
+
+    def test_forward_mode_connects_address_strings(self):
+        with DeltaServer(("127.0.0.1", 0)) as server:
+            diag = Diagnosis.forward(f"127.0.0.1:{server.address[1]}")
+            telem = StepTelemetry("h0", wire=True)
+            self._one_step(telem)
+            assert diag.tick(telem) == []
+            assert diag.flush(10.0)
+            assert len(server.drain()) == 1
+            diag.close()
+
+    def _engine(self, telem, **kw):
+        return ServeEngine(_DummyModel(), None, telemetry=telem, **kw)
+
+    def test_new_surface_warns_nothing(self):
+        telem = StepTelemetry("h0", wire=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            eng = self._engine(telem, diagnosis=Diagnosis.fleet(fresh_root()))
+        assert eng.diagnosis.mode == "fleet"
+
+    def test_deprecated_kwargs_warn_but_work(self):
+        telem = StepTelemetry("h0", window=8, streaming=True)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            eng = self._engine(
+                telem, live_analyzer=BigRootsAnalyzer(JAX_FEATURES)
+            )
+        assert eng.diagnosis.mode == "local"
+
+        agg = fresh_root()
+        with pytest.warns(DeprecationWarning):
+            eng = self._engine(
+                StepTelemetry("h0", wire=True), fleet=agg, fleet_step=False
+            )
+        assert eng.diagnosis.mode == "fleet"
+        assert eng.diagnosis.aggregator is agg
+        assert eng.diagnosis.drive is False
+
+        with pytest.warns(DeprecationWarning):
+            eng = self._engine(StepTelemetry("h0", wire=True),
+                               delta_sink=CollectSink())
+        assert eng.diagnosis.mode == "forward"
+
+    def test_mixing_old_and_new_raises(self):
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="not both"):
+                self._engine(
+                    StepTelemetry("h0", wire=True),
+                    diagnosis=Diagnosis.fleet(fresh_root()),
+                    fleet=fresh_root(),
+                )
+
+    def test_legacy_fleet_plus_sink_still_raises(self):
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="not both"):
+                self._engine(StepTelemetry("h0", wire=True),
+                             fleet=fresh_root(), delta_sink=CollectSink())
+
+    def test_legacy_inert_live_analyzer_stays_inert(self):
+        """The old surface silently ignored live_analyzer without a
+        streaming telemetry; the shim must not tighten that."""
+        with pytest.warns(DeprecationWarning):
+            eng = self._engine(StepTelemetry("h0"),
+                               live_analyzer=BigRootsAnalyzer(JAX_FEATURES))
+        assert eng.diagnosis is None
