@@ -45,6 +45,7 @@ BENCHES = {
     "tree_merge": scale_bench.tree_merge,
     "wire_transport": scale_bench.wire_transport,
     "policy_eval": scale_bench.policy_eval,
+    "whatif_replay": scale_bench.whatif_replay,
     "kernels": scale_bench.kernel_bench,
     "e2e_train": scale_bench.e2e_train_bench,
 }
@@ -114,7 +115,7 @@ def main() -> None:
     elif check:
         wanted = ["analyzer_scale", "streaming_scale", "fleet_gates",
                   "fleet_merge", "tree_merge", "wire_transport",
-                  "policy_eval"]
+                  "policy_eval", "whatif_replay"]
     else:
         wanted = list(BENCHES)
 

@@ -49,8 +49,15 @@ Run it::
     PYTHONPATH=src python examples/fleet_demo.py --hosts 4 --aggs 2 \\
         --steps 24 --agg-kill-after 8                 # depth-2 tree + failover
 
-Exits non-zero if the cause streams differ or no dropout escalation
-surfaced (star mode) / rows were lost or duplicated through the
+Both modes additionally run an in-process attribution hop check: a wire
+v3 (``BRD3``) payload carrying a priced RootCause is pushed through a
+:class:`TreeAggregator`, and the forwarded envelope must embed the
+original bytes verbatim with the root re-emitting the cause's
+``Attribution`` intact.
+
+Exits non-zero if the cause streams differ, the attributed payload does
+not survive the tree hop byte-identically, no dropout escalation
+surfaced (star mode), or rows were lost or duplicated through the
 aggregator failover (tree mode).  See ``docs/operations.md`` for the
 production version of this topology and ``docs/wire_format.md`` for what
 the bytes look like.
@@ -203,7 +210,54 @@ def replay(events: list) -> list:
 def cause_fields(cause) -> tuple:
     return (cause.task_id, cause.stage_id, cause.node, cause.feature,
             cause.kind, cause.value, cause.peer_groups, cause.guidance,
-            cause.severity)
+            cause.severity, cause.attribution)
+
+
+def attribution_hop_check() -> bool:
+    """Prove an *attributed* (wire v3) payload survives the tree hop
+    byte-identically: a StepDelta carrying a priced RootCause is pushed
+    through an in-process TreeAggregator, the forwarded ``BRDF``
+    envelope must embed the original ``BRD3`` bytes verbatim, and the
+    root must re-emit the cause with its Attribution intact."""
+    from repro.core import Attribution, FeatureKind, RootCause
+    from repro.core.analyzer import cause_from_wire, cause_to_wire
+    from repro.telemetry.events import ForwardedDelta, StageDelta, StepDelta
+
+    class Pipe:
+        def __init__(self) -> None:
+            self.sent: list[bytes] = []
+
+        def send_bytes(self, payload: bytes, boot: int, seq: int) -> bool:
+            self.sent.append(payload)
+            return True
+
+    attr = Attribution(estimated_recovery_s=2.5, throughput_delta=0.25,
+                       cumulative_recovery_s=2.5, tasks_rebased=1,
+                       baseline_s=10.0)
+    cause = RootCause(task_id="h0/s0", stage_id="s0", node="h0",
+                      feature="cpu", kind=FeatureKind.RESOURCE, value=2.0,
+                      peer_groups=("inter",), severity=1, attribution=attr)
+    n = 4
+    raw = StepDelta("h0", 1, [StageDelta(
+        "s0", [f"t{i}" for i in range(n)], ["h0"] * n,
+        np.zeros(n), np.ones(n), np.zeros(n, np.int16),
+        {"cpu": np.full(n, 0.2)}, {"cpu": np.ones(n, bool)},
+    )], boot=1, causes=[cause_to_wire(cause)]).to_bytes()
+
+    pipe = Pipe()
+    mid = TreeAggregator(JAX_FEATURES, name="hopcheck", parent=pipe)
+    mid.ingest(raw)
+    mid.pump()
+    verbatim = (len(pipe.sent) == 1
+                and ForwardedDelta.from_bytes(pipe.sent[0]).payloads == [raw])
+    root = fresh_aggregator(lease=None)
+    root.ingest(pipe.sent[0])
+    out = [c for c in root.step() if c.attribution is not None]
+    survived = (verbatim and len(out) == 1
+                and out[0] == cause_from_wire(cause_to_wire(cause)))
+    print(f"[fleet_demo] attributed BRD3 payload through tree hop: "
+          f"verbatim={verbatim} attribution_intact={survived}")
+    return survived
 
 
 def run_parent(args) -> int:
@@ -319,7 +373,7 @@ def run_parent(args) -> int:
     if kill_target:
         print(f"[fleet_demo] dropout escalations: {len(dropout_causes)} "
               f"(severities {[c.severity for c in dropout_causes]})")
-    ok = identical and bool(live_causes)
+    ok = identical and bool(live_causes) and attribution_hop_check()
     if kill_target:
         ok = ok and bool(dropout_causes)
     if not ok:
@@ -441,6 +495,7 @@ def run_tree_parent(args) -> int:
     print(f"[fleet_demo] causes via tree: {len(live_causes)}  "
           f"in-process replay: {len(replayed)}  byte-identical: {identical}")
     ok = (identical and bool(live_causes) and conserved and hosts_ok
+          and attribution_hop_check()
           and (args.agg_kill_after == 0
                or (restarted and agg.host_restarts >= 1)))
     if not ok:

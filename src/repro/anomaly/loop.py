@@ -48,6 +48,7 @@ from dataclasses import dataclass, field
 from ..core.analyzer import BigRootsAnalyzer, BigRootsThresholds, RootCause
 from ..core.features import SPARK_FEATURES
 from ..core.records import TaskRecord, Trace
+from ..core.whatif import WhatIfReplayer
 from ..ft.policy import (
     Action,
     ActionKind,
@@ -205,6 +206,7 @@ class ClosedLoopSim:
         speculation_overhead: float = 1.0,
         split_factor: float = 4.0,
         node_prefix: str = "slave",
+        attribution: bool = False,
     ) -> None:
         if isinstance(profile, str):
             profile = WORKLOAD_PROFILES[profile]
@@ -221,6 +223,12 @@ class ClosedLoopSim:
         self.speculation_overhead = speculation_overhead
         self.split_factor = split_factor
         self._actuator: SimActuator | None = None
+        # What-if attribution: price each diagnosed cause in recovered
+        # stage time; the job-level sum lands in ``whatif_recovered_s``.
+        self._replayer = (
+            WhatIfReplayer(SPARK_FEATURES) if attribution else None
+        )
+        self.whatif_recovered_s = 0.0
 
     def active_nodes(self) -> list[str]:
         cordoned = self._actuator.cordoned if self._actuator else set()
@@ -240,6 +248,7 @@ class ClosedLoopSim:
         rng = random.Random(self.seed)
         actuator = SimActuator(self)
         self._actuator = actuator
+        self.whatif_recovered_s = 0.0
         engine = PolicyEngine(rules, actuator, guardrails=guardrails,
                               dry_run=dry_run, audit_path=audit_path)
         timeline = ResourceTimeline()
@@ -367,7 +376,18 @@ class ClosedLoopSim:
                 start=t.start, end=t.end, locality=t.locality,
                 features=t.features,
             ))
-        return [c for sa in analyzer.analyze(trace) for c in sa.root_causes]
+        causes = [c for sa in analyzer.analyze(trace)
+                  for c in sa.root_causes]
+        if self._replayer is not None:
+            causes = self._replayer.attribute(trace, causes)
+            # Joint recovery (all implicated rows rebased together), not
+            # the per-cause sum: concurrent stragglers shadow each other
+            # in the exclusive counterfactual, and mitigation acts on
+            # the whole diagnosis at once.
+            self.whatif_recovered_s += sum(
+                self._replayer.last_stage_recovery.values()
+            )
+        return causes
 
 
 # ----------------------------------------------------------------------
@@ -429,3 +449,35 @@ def ab_compare(
     mitigated = arm(False, audit_path)
     return ABResult(scenario=scenario, mitigated=mitigated,
                     baseline=baseline)
+
+
+def whatif_recovery(
+    scenario: str,
+    *,
+    seed: int = 0,
+    stages: int = 10,
+    nodes: int = 6,
+    slots_per_node: int = 4,
+    node_prefix: str = "slave",
+) -> float:
+    """Predicted recovered seconds for one incident scenario: a
+    diagnose-only run (no actions applied) with what-if attribution on,
+    summing the replayer's *joint* per-stage recovery
+    (``WhatIfReplayer.last_stage_recovery``) across the job — the joint
+    counterfactual rebases every implicated row at once, so concurrent
+    stragglers don't shadow each other the way per-cause exclusive
+    estimates do.
+
+    This is the *prediction* side of the what-if framing: it prices the
+    incident without running the mitigated arm.  Ranking scenarios by
+    this predictor matches the measured A/B ordering of
+    :func:`ab_compare` (pinned in ``tests/test_whatif.py`` for the cpu
+    and skew scenarios)."""
+    profile, schedule = _scenario(scenario, nodes, node_prefix)
+    sim = ClosedLoopSim(
+        nodes=nodes, slots_per_node=slots_per_node, seed=seed,
+        profile=profile, stages=stages, schedule=schedule,
+        node_prefix=node_prefix, attribution=True,
+    )
+    sim.run(DEFAULT_RULES, dry_run=True)
+    return sim.whatif_recovered_s

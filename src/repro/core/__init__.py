@@ -9,6 +9,7 @@ Public API:
         P2Quantile, P2ColumnSketch,
         FeatureKind, FeatureSpec, FeatureSchema, SPARK_FEATURES, JAX_FEATURES,
         BigRootsAnalyzer, BigRootsThresholds, RootCause, StageAnalysis,
+        Attribution, WhatIfReplayer,
         PCCAnalyzer, PCCThresholds,
         straggler_mask, straggler_scale,
         evaluate, roc_sweep, auc, ConfusionCounts,
@@ -16,13 +17,21 @@ Public API:
     )
 """
 from .analyzer import (
+    ATTRIBUTION_VERSION,
+    Attribution,
     BigRootsAnalyzer,
     BigRootsThresholds,
     RootCause,
     StageAnalysis,
     TimelineStore,
+    attribution_from_wire,
+    attribution_to_wire,
+    build_causes,
+    cause_from_wire,
+    cause_to_wire,
     found_set,
     normalize_features,
+    synthesize_cause,
 )
 from .features import (
     JAX_FEATURES,
@@ -40,6 +49,7 @@ from .report import TraceSummary, per_stage_table, render_markdown, summarize
 from .roc import ConfusionCounts, RocPoint, auc, evaluate, roc_sweep
 from .sketch import MIN_SKETCH_SAMPLES, P2ColumnSketch, P2Quantile
 from .straggler import DEFAULT_STRAGGLER_THRESHOLD, straggler_mask, straggler_scale
+from .whatif import WhatIfReplayer
 from .window import (
     CauseState,
     RootCauseStream,
@@ -48,6 +58,8 @@ from .window import (
 )
 
 __all__ = [
+    "ATTRIBUTION_VERSION",
+    "Attribution",
     "BigRootsAnalyzer",
     "BigRootsThresholds",
     "CauseState",
@@ -77,13 +89,20 @@ __all__ = [
     "Trace",
     "TraceStore",
     "TraceSummary",
+    "WhatIfReplayer",
+    "attribution_from_wire",
+    "attribution_to_wire",
     "auc",
+    "build_causes",
+    "cause_from_wire",
+    "cause_to_wire",
     "evaluate",
     "eval_gates_np",
     "found_set",
     "get_schema",
     "normalize_features",
     "pack_windows",
+    "synthesize_cause",
     "per_stage_table",
     "render_markdown",
     "roc_sweep",

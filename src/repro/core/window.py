@@ -998,7 +998,9 @@ class CauseState:
     last_confirmed: int       # step of the latest confirmation
     confirmations: int = 1    # total confirmations observed (all cycles)
     emits: int = 1            # times this key was emitted to the caller
-    severity: int = 1         # escalation level: +1 per re-emergence after decay
+    severity: int = 1         # escalation level: +1 per re-emergence after
+    #                           decay, capped at RootCauseStream.MAX_SEVERITY
+    recovered_s: float = 0.0  # what-if recovery accumulated across emissions
 
     def clean_windows(self, step: int) -> int:
         return step - self.last_confirmed
@@ -1017,12 +1019,27 @@ class RootCauseStream:
     key stays *clean* (unconfirmed) for more than ``decay_steps`` steps it
     is dormant: the next confirmation **re-emits** it with ``severity``
     escalated by one — a cause that keeps coming back is a worse cause,
-    not a duplicate.  A key clean for more than ``forget_steps`` steps
-    (default ``8 × decay_steps``) is dropped entirely, which bounds
+    not a duplicate.  Escalation is capped at :data:`MAX_SEVERITY`
+    (override with ``max_severity=``): severity is an urgency *level*,
+    not a counter, and an unbounded value would let one flapping cause
+    outrank every rule threshold forever (``CauseState.confirmations``
+    keeps the full count).  A key clean for more than ``forget_steps``
+    steps (default ``8 × decay_steps``) is dropped entirely, which bounds
     ``seen`` by the distinct causes of the last ``forget_steps`` steps
     instead of the whole history of a long-running serve loop.
     ``decay_steps=None`` restores the legacy grow-forever/emit-once-ever
     behavior.
+
+    What-if attribution: pass ``attributor=`` (a
+    :class:`~repro.core.whatif.WhatIfReplayer`) and every *emitted* cause
+    carries an :class:`~repro.core.analyzer.Attribution` priced against
+    the current source windows.  The stream aggregates recovered time
+    across the dedup lifecycle: each key's :class:`CauseState` accumulates
+    ``recovered_s`` over its emissions, and a decay/re-emit carries the
+    running total as ``cumulative_recovery_s`` (a cause that keeps coming
+    back keeps costing), with the stream-wide sum in ``recovered_total``.
+    With no attributor the emitted stream is byte-identical to an
+    attribution-less build.
 
     >>> stream = RootCauseStream(analyzer, telem.live_window)
     >>> ... inside the train loop, once per step ...
@@ -1031,6 +1048,9 @@ class RootCauseStream:
     ...                 cause.feature, cause.severity)
     """
 
+    #: Documented ceiling for severity escalation on decay/re-emit.
+    MAX_SEVERITY = 8
+
     def __init__(
         self,
         analyzer,
@@ -1038,6 +1058,8 @@ class RootCauseStream:
         *,
         decay_steps: int | None = 256,
         forget_steps: int | None = None,
+        attributor=None,
+        max_severity: int | None = None,
     ) -> None:
         if decay_steps is not None and decay_steps < 1:
             raise ValueError("decay_steps must be >= 1 (or None to disable)")
@@ -1049,12 +1071,19 @@ class RootCauseStream:
         if forget_steps is not None and decay_steps is not None:
             forget_steps = max(forget_steps, decay_steps)
         self.forget_steps = forget_steps
+        self.attributor = attributor
+        self.max_severity = (
+            self.MAX_SEVERITY if max_severity is None else int(max_severity)
+        )
+        if self.max_severity < 1:
+            raise ValueError("max_severity must be >= 1")
         self.seen: dict[tuple[str, str], CauseState] = {}
         self.last_analysis = None
         self.steps = 0
         self.emitted = 0
         self.reemitted = 0
         self.forgotten = 0
+        self.recovered_total = 0.0
         # Per-stage content stamps for StreamingTraceStore sources: a
         # window whose (uid, total_added, retired_total) is unchanged since
         # the last step is skipped — its rows, and therefore its analysis,
@@ -1130,11 +1159,14 @@ class RootCauseStream:
                 st.confirmations += 1
                 st.last_confirmed = step
                 if dormant:
-                    # Re-emergence after a clean spell: escalate and re-emit.
-                    st.severity += 1
+                    # Re-emergence after a clean spell: escalate (capped)
+                    # and re-emit.
+                    st.severity = min(st.severity + 1, self.max_severity)
                     st.emits += 1
                     self.reemitted += 1
                     fresh.append(replace(cause, severity=st.severity))
+        if self.attributor is not None and fresh:
+            fresh = self._attribute(fresh)
         self.emitted += len(fresh)
         if self.forget_steps is not None:
             horizon = self.forget_steps
@@ -1144,3 +1176,26 @@ class RootCauseStream:
                 del self.seen[k]
             self.forgotten += len(expired)
         return fresh
+
+    def _attribute(self, fresh: list) -> list:
+        """Price this tick's emissions via the attributor and fold each
+        estimate into its key's lifetime ``recovered_s`` — a re-emitted
+        cause carries the total recovered time it has cost across
+        decay/re-emit cycles, not just this sighting's estimate."""
+        attributed = self.attributor.attribute(self.source, fresh)
+        out = []
+        for cause in attributed:
+            a = cause.attribution
+            if a is None:
+                out.append(cause)
+                continue
+            self.recovered_total += a.estimated_recovery_s
+            cum = a.estimated_recovery_s
+            st = self.seen.get(cause.key)
+            if st is not None:
+                st.recovered_s += a.estimated_recovery_s
+                cum = st.recovered_s
+            out.append(replace(
+                cause, attribution=replace(a, cumulative_recovery_s=cum),
+            ))
+        return out

@@ -33,7 +33,16 @@ with the guardrail that fired:
 - *rollback*: an applied action opens a verification watch; if the mean
   step time over the next ``verify_steps`` steps did not improve on the
   pre-action baseline, the action is rolled back through the actuator
-  and the target charged with a flap.
+  and the target charged with a flap;
+- *recovery budget*: with what-if attribution on, causes are ranked by
+  estimated recovered time (``attribution.cumulative_recovery_s``, raw
+  severity as tie-break) before evaluation, and
+  ``min_recovery_s`` refuses actions whose priced cause recovers less
+  than the configured floor — actions are budgeted by what they are
+  worth, not how loud the cause was.  Unattributed causes (attribution
+  off, or synthesized findings like host dropouts) are never ranked or
+  vetoed on recovery, so an unattributed stream's decision log is
+  byte-identical to the pre-attribution engine's.
 
 ``dry_run=True`` evaluates everything — the same rules, the same
 guardrail state transitions, the same rollback verdicts — but never
@@ -230,6 +239,10 @@ class GuardrailConfig:
     verify_steps: int = 8             # post-action rollback watch length
     min_improvement: float = 0.0      # required relative step-time gain
     audit_cap: int = 4096             # in-memory audit entries retained
+    #: Minimum what-if recovered time (seconds) an *attributed* cause
+    #: must promise before its action may reach the actuator; 0.0 (the
+    #: default) disables the check, and unattributed causes always pass.
+    min_recovery_s: float = 0.0
 
 
 class Actuator:
@@ -415,6 +428,18 @@ class PolicyEngine:
         if self._rate_veto:
             self._rate_veto.clear()
         acted: list[Action] = []
+        causes = list(causes)
+        if any(c.attribution is not None for c in causes):
+            # Recovery ranking: highest priced recovery first, severity
+            # as tie-break.  Only entered when attribution is actually
+            # present — an unattributed stream is never reordered, so
+            # its decision log stays byte-identical to the
+            # pre-attribution engine's.
+            causes.sort(key=lambda c: (
+                -(c.attribution.cumulative_recovery_s
+                  if c.attribution is not None else 0.0),
+                -c.severity,
+            ))
         by_feature = self._by_feature
         any_feature = self._any_feature
         evaluate = self._evaluate
@@ -477,7 +502,8 @@ class PolicyEngine:
                 "cause": [cause.task_id, cause.feature],
                 "severity": cause.severity})
             return None
-        guardrail = self._guardrail_veto(rule, kind_value, target, live_hosts)
+        guardrail = self._guardrail_veto(rule, kind_value, target, live_hosts,
+                                         cause)
         if guardrail is not None:
             self.suppressed_count += 1
             seq = self._seq
@@ -513,9 +539,12 @@ class PolicyEngine:
         return action
 
     def _guardrail_veto(self, rule: Rule, kind_value: str, target: str,
-                        live_hosts: int | None) -> tuple[str, str] | None:
+                        live_hosts: int | None,
+                        cause: RootCause) -> tuple[str, str] | None:
         """First guardrail that vetoes ``(rule.action, target)``, or None.
-        Checked in a fixed order so audit logs are stable."""
+        Checked in a fixed order so audit logs are stable.  The recovery
+        budget runs last and is never cached: two causes sharing a
+        (rule, target) can carry different priced recoveries."""
         g = self.guardrails
         # Cooldown is per (rule, target) — two rules may share an action
         # kind but not a cooldown — so its cache key is the rule name.
@@ -556,6 +585,12 @@ class PolicyEngine:
                     return ("min_fleet",
                             f"cordon would leave {remaining} < "
                             f"min_fleet={g.min_fleet} hosts")
+        if g.min_recovery_s > 0.0 and cause.attribution is not None:
+            recovery = cause.attribution.cumulative_recovery_s
+            if recovery < g.min_recovery_s:
+                return ("min_recovery",
+                        f"estimated recovery {recovery:.3f}s < "
+                        f"min_recovery_s={g.min_recovery_s:.3f}s")
         return None
 
     def _commit(self, action: Action) -> None:

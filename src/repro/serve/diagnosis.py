@@ -1,11 +1,11 @@
 """One wiring surface for in-loop diagnosis: the :class:`Diagnosis` facade.
 
-The serve engine and the launch entry points used to take four
-mutually-exclusive kwargs (``live_analyzer`` / ``fleet`` / ``delta_sink``
-/ ``policy``) whose legal combinations were documented prose.  With tree
-aggregation there are now *four* roles a process can play — local
-analyzer, fleet root, tree aggregator, forwarding host — and one facade
-expresses all of them:
+The serve engine and the launch entry points take exactly one wiring
+object — this facade (the pre-facade ``live_analyzer`` / ``fleet`` /
+``delta_sink`` / ``policy`` kwargs are gone).  With tree aggregation
+there are *four* roles a process can play — local analyzer, fleet root,
+tree aggregator, forwarding host — and one facade expresses all of
+them:
 
 - ``Diagnosis.local(analyzer)`` — per-host in-loop diagnosis over the
   telemetry's own streaming window (no fleet).
@@ -56,6 +56,7 @@ class Diagnosis:
         sink=None,
         policy=None,
         drive: bool = True,
+        attribution: bool = False,
     ) -> None:
         modes = sum(x is not None for x in (analyzer, aggregator, sink))
         if modes > 1 or (modes == 0 and policy is None):
@@ -74,15 +75,21 @@ class Diagnosis:
         self.sink = sink
         self.policy = policy
         self.drive = bool(drive)
+        self.attribution = bool(attribution)
         self._stream: RootCauseStream | None = None
 
     # -- constructors --------------------------------------------------------
     @classmethod
-    def local(cls, analyzer, *, policy=None) -> "Diagnosis":
+    def local(cls, analyzer, *, policy=None,
+              attribution: bool = False) -> "Diagnosis":
         """Per-host diagnosis: run ``analyzer`` over the telemetry's own
         streaming window each tick (needs
-        ``StepTelemetry(streaming=True)``)."""
-        return cls(analyzer=analyzer, policy=policy)
+        ``StepTelemetry(streaming=True)``).  ``attribution=True`` prices
+        each fresh cause with a what-if recovered-time estimate
+        (:class:`~repro.core.whatif.WhatIfReplayer`); off by default the
+        emitted stream is byte-identical to an unattributed one."""
+        return cls(analyzer=analyzer, policy=policy,
+                   attribution=attribution)
 
     @classmethod
     def fleet(cls, aggregator, *, drive: bool = True,
@@ -127,8 +134,16 @@ class Diagnosis:
                 raise ValueError(
                     "local diagnosis needs StepTelemetry(streaming=True)"
                 )
+            attributor = None
+            if self.attribution:
+                from ..core.whatif import WhatIfReplayer
+
+                attributor = WhatIfReplayer(
+                    getattr(telemetry, "schema", None)
+                )
             self._stream = RootCauseStream(self.analyzer,
-                                           telemetry.live_window)
+                                           telemetry.live_window,
+                                           attributor=attributor)
 
     # -- per-step drive ------------------------------------------------------
     def tick(self, telemetry, step_time: float | None = None) -> list:

@@ -33,15 +33,14 @@ close the loop: every step's fresh causes are evaluated against the
 policy's rules and acted on through its actuator, with the measured
 decode-step time feeding its rollback verifier.
 
-The pre-facade kwargs (``live_analyzer`` / ``fleet`` / ``fleet_step`` /
-``delta_sink`` / ``policy``) still work for one release with a
-``DeprecationWarning``; they build the equivalent ``Diagnosis``
-internally.
+``diagnosis=`` is the only wiring surface: the pre-facade kwargs
+(``live_analyzer`` / ``fleet`` / ``fleet_step`` / ``delta_sink`` /
+``policy``) completed their deprecation cycle and are removed — passing
+them now raises ``TypeError`` like any unknown kwarg.
 """
 from __future__ import annotations
 
 import time
-import warnings
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -52,7 +51,6 @@ import numpy as np
 from ..models.api import Model
 from ..telemetry.events import StepTelemetry
 from .diagnosis import Diagnosis
-from .fleet import FleetAggregator
 
 
 def make_prefill_step(model: Model) -> Callable:
@@ -102,11 +100,6 @@ class ServeEngine:
         telemetry: StepTelemetry | None = None,
         eos_id: int | None = None,
         diagnosis: Diagnosis | None = None,
-        live_analyzer=None,
-        fleet: FleetAggregator | None = None,
-        fleet_step: bool | None = None,
-        delta_sink=None,
-        policy=None,
     ) -> None:
         self.model = model
         self.params = params
@@ -119,60 +112,12 @@ class ServeEngine:
         self._decode = jax.jit(make_decode_step(model, temperature))
         self._key = jax.random.key(0)
         self.live_root_causes: list = []
-        legacy = (live_analyzer is not None or fleet is not None
-                  or delta_sink is not None or policy is not None
-                  or fleet_step is not None)
-        if legacy:
-            warnings.warn(
-                "ServeEngine's live_analyzer=/fleet=/fleet_step=/"
-                "delta_sink=/policy= kwargs are deprecated; pass "
-                "diagnosis=Diagnosis.local/.fleet/.forward(..., "
-                "policy=...) instead",
-                DeprecationWarning, stacklevel=2,
-            )
-            if diagnosis is not None:
-                raise ValueError(
-                    "pass either diagnosis= or the deprecated wiring "
-                    "kwargs, not both"
-                )
-            diagnosis = self._legacy_diagnosis(
-                telemetry, live_analyzer, fleet, fleet_step, delta_sink,
-                policy,
-            )
         # The one wiring surface: what happens to each step's telemetry
         # (see repro.serve.diagnosis).  bind() validates the telemetry
         # mode up front so misconfiguration fails at construction.
         self.diagnosis = diagnosis
         if diagnosis is not None:
             diagnosis.bind(telemetry)
-
-    @staticmethod
-    def _legacy_diagnosis(telemetry, live_analyzer, fleet, fleet_step,
-                          delta_sink, policy) -> Diagnosis | None:
-        """Map the deprecated kwarg combinations onto the facade,
-        preserving their exact semantics (including live_analyzer being
-        silently inert without a streaming telemetry)."""
-        if fleet is not None and delta_sink is not None:
-            raise ValueError(
-                "pass either an in-process fleet aggregator or a "
-                "delta_sink transport, not both"
-            )
-        if fleet is not None:
-            return Diagnosis.fleet(
-                fleet, drive=fleet_step if fleet_step is not None else True,
-                policy=policy,
-            )
-        if delta_sink is not None:
-            return Diagnosis.forward(delta_sink, policy=policy)
-        if (
-            live_analyzer is not None
-            and telemetry is not None
-            and telemetry.live_window is not None
-        ):
-            return Diagnosis.local(live_analyzer, policy=policy)
-        if policy is not None:
-            return Diagnosis(policy=policy)
-        return None
 
     def _decode_once(self, nxt, cache):
         """One decode step; splits a PRNG key only when sampling."""

@@ -41,8 +41,14 @@ import struct
 import time
 from dataclasses import dataclass, field
 
-from ..core.analyzer import BigRootsAnalyzer, RootCause
-from ..core.features import FeatureKind, FeatureSchema
+from ..core.analyzer import (
+    BigRootsAnalyzer,
+    RootCause,
+    cause_from_wire,
+    synthesize_cause,
+)
+from ..core.features import FeatureSchema
+from ..core.whatif import WhatIfReplayer
 from ..core.window import RootCauseStream, StreamingTraceStore
 from ..telemetry.events import (
     MAX_FORWARD_DEPTH,
@@ -82,6 +88,14 @@ class FleetAggregator:
     decay_steps, forget_steps:
         Emission dedup/decay policy, as for
         :class:`~repro.core.window.RootCauseStream`.
+    attribution:
+        When True, a :class:`~repro.core.whatif.WhatIfReplayer` prices
+        every freshly confirmed cause with an estimated recovered time
+        (counterfactual critical-path replay over the merged windows) —
+        each emitted :class:`~repro.core.analyzer.RootCause` carries an
+        ``attribution`` and downstream policy ranking/guardrails can
+        budget by recovery instead of raw severity.  Off (default), the
+        emitted stream is byte-identical to an unattributed aggregator.
     max_stages:
         Retention cap on distinct stage windows: when a new stage would
         exceed it, the oldest-created windows are dropped (an always-on
@@ -177,6 +191,7 @@ class FleetAggregator:
         decay_steps: int | None = 256,
         forget_steps: int | None = None,
         max_stages: int | None = 64,
+        attribution: bool = False,
         lease: float | None = None,
         lease_ceiling: float | None = None,
         lease_multiplier: float = 4.0,
@@ -192,9 +207,11 @@ class FleetAggregator:
         self.store = StreamingTraceStore(
             schema, span=span, max_rows=max_rows, quantile=quantile,
         )
+        self.attribution = bool(attribution)
         self.stream = RootCauseStream(
             self.analyzer, self.store,
             decay_steps=decay_steps, forget_steps=forget_steps,
+            attributor=WhatIfReplayer(schema) if attribution else None,
         )
         self.max_stages = max_stages
         self.lease = None if lease is None else float(lease)
@@ -217,6 +234,11 @@ class FleetAggregator:
         self.host_restarts = 0
         self.stages_dropped = 0
         self.stale_stage_drops = 0
+        # Attributed causes carried in accepted v3 deltas (wire-form
+        # dicts), drained into the next step()'s emissions: a leaf's
+        # priced findings ride the same payloads as its rows.
+        self._remote_causes: list[dict] = []
+        self.remote_causes_ingested = 0
         # Insertion-ordered tombstones of pruned stage ids (bounded): a
         # straggling host's late delta must not resurrect a pruned stage.
         self._pruned: dict[str, None] = {}
@@ -269,7 +291,7 @@ class FleetAggregator:
             if len(live_stages) != len(delta.stages):
                 self.stale_stage_drops += len(delta.stages) - len(live_stages)
                 delta = StepDelta(delta.host, delta.seq, live_stages,
-                                  boot=delta.boot)
+                                  boot=delta.boot, causes=delta.causes)
         rows = delta.apply_to(self.store)
         # Commit the watermark only after the delta applied: a delta that
         # raised mid-apply stays un-acked, so its at-least-once retry is
@@ -283,6 +305,9 @@ class FleetAggregator:
             del boots[next(iter(boots))]
         self.deltas_ingested += 1
         self.rows_ingested += rows
+        if delta.causes:
+            self._remote_causes.extend(delta.causes)
+            self.remote_causes_ingested += len(delta.causes)
         self._note_alive(delta.host, delta.stages)
         self._on_accept(delta, raw)
         self._prune_stages()
@@ -411,6 +436,12 @@ class FleetAggregator:
         self._ticks += 1
         for cause in causes:
             self._node_last_cause[cause.node] = self._ticks
+        if self._remote_causes:
+            # Attributed causes shipped inside v3 deltas: decoded here
+            # (not re-diagnosed — the leaf already confirmed and priced
+            # them) and surfaced alongside this tick's own emissions.
+            remote, self._remote_causes = self._remote_causes, []
+            causes.extend(cause_from_wire(d) for d in remote)
         if self.lease is not None:
             causes.extend(self._check_leases())
         self._advance_fleet_clock()
@@ -437,14 +468,12 @@ class FleetAggregator:
                 <= horizon
                 for nd in nodes
             )
-            escalated.append(RootCause(
+            escalated.append(synthesize_cause(
                 task_id=f"{host}/dropout",
                 stage_id=self._host_last_stage.get(host, ""),
                 node=nodes[0] if nodes else host,
                 feature=DROPOUT_FEATURE,
-                kind=FeatureKind.DISCRETE,
                 value=float(silent),
-                peer_groups=("fleet",),
                 guidance=(
                     f"host {host!r} stopped reporting {silent:.1f}s ago "
                     f"(effective lease {lease:.1f}s, floor {self.lease:.1f}s)"

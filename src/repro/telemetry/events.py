@@ -28,6 +28,16 @@ magic; ``docs/wire_format.md`` is the normative spec):
   bytes, quantized /proc counters, zero GC pauses), so most columns
   collapse to a bitmask.  The encoding is stateless per payload: a
   resent or reordered delta decodes without any reference state.
+- **v3** (``BRD3``): v2's exact body layout plus an *attribution block*
+  — the JSON header gains a ``causes`` list of wire-form attributed
+  :class:`~repro.core.analyzer.RootCause` records (see
+  :func:`repro.core.analyzer.cause_to_wire`), so a leaf or mid-tier
+  diagnosis can ship its what-if priced causes upstream and have them
+  survive fan-in tree aggregation byte-identically (``BRDF`` forwards
+  inner payloads verbatim).  v3 is emitted *only when a delta actually
+  carries causes*: with attribution off :meth:`StepDelta.to_bytes`
+  produces v2 bytes unchanged, so v2-only readers never see a ``BRD3``
+  frame from an unattributed fleet.
 
 A per-column ``present`` mask rides along in both versions so "recorded
 as 0.0" and "absent" stay distinct across the wire (the same invariant
@@ -59,6 +69,7 @@ from .timeline import ResourceTimeline
 
 WIRE_V1_MAGIC = b"BRD1"
 WIRE_V2_MAGIC = b"BRD2"
+WIRE_V3_MAGIC = b"BRD3"
 WIRE_FWD_MAGIC = b"BRDF"
 _WIRE_MAGIC = WIRE_V1_MAGIC  # back-compat alias
 
@@ -71,6 +82,11 @@ _MAX_ROWS_PER_STAGE = 1 << 24
 #: declared length caps decompression *before* it runs, so a small
 #: high-ratio DEFLATE bomb cannot make the decoder materialize gigabytes.
 _MAX_BODY_BYTES = 1 << 30
+
+#: Refuse v3 headers carrying more than this many attributed causes —
+#: far above any real diagnosis tick, bounding allocation from a corrupt
+#: or hostile header.
+_MAX_WIRE_CAUSES = 1 << 16
 
 
 class WireFormatError(ValueError):
@@ -209,12 +225,18 @@ class StepDelta:
     taken when the :class:`StepTelemetry` was created).  Together they let
     the consumer tell a *redelivered* delta (same boot, seq not newer →
     drop) from a *restarted host* (newer boot → accept and reset) without
-    any handshake."""
+    any handshake.
+
+    ``causes`` carries attributed root causes in wire form (dicts from
+    :func:`repro.core.analyzer.cause_to_wire`) for the v3 attribution
+    block; it is empty on every v1/v2 payload and on any delta cut by
+    an attribution-off pipeline."""
 
     host: str
     seq: int
     stages: list[StageDelta]
     boot: int = 0
+    causes: list = field(default_factory=list)
 
     @property
     def num_rows(self) -> int:
@@ -234,7 +256,7 @@ class StepDelta:
         return ingested
 
     # -- wire format -------------------------------------------------------
-    def _header_bytes(self) -> bytes:
+    def _header_bytes(self, *, with_causes: bool = False) -> bytes:
         header = {
             "host": self.host,
             "seq": self.seq,
@@ -250,6 +272,8 @@ class StepDelta:
                 for s in self.stages
             ],
         }
+        if with_causes:
+            header["causes"] = list(self.causes)
         return json.dumps(header, separators=(",", ":")).encode()
 
     def _canonical_column(self, s: "StageDelta", name: str) -> np.ndarray:
@@ -267,20 +291,36 @@ class StepDelta:
             s.present.get(name, np.ones(len(s), dtype=bool)), dtype="u1"
         )
 
-    def to_bytes(self, version: int = 2) -> bytes:
+    def to_bytes(self, version: int | None = None) -> bytes:
         """Serialize this delta as a self-contained wire payload.
 
-        ``version=2`` (default): magic ``BRD2``, u32 decompressed body
-        length, then a DEFLATE stream of [u32 header length, JSON header,
-        per-stage delta-compressed column sections] — see the module
-        docstring and ``docs/wire_format.md``.  ``version=1``: magic
-        ``BRD1``, u32 header length, JSON header, then per stage the raw
-        ``<f8/<i2/u1`` column buffers in header order.  Both are
-        stateless per payload and decoded by :meth:`from_bytes` off the
-        magic alone.  Column values where ``present`` is False are
-        encoded as 0.0 (the decoder re-imposes the mask)."""
-        head = self._header_bytes()
+        ``version=None`` (default) auto-selects: version 2 normally,
+        upgraded to version 3 iff ``causes`` is non-empty — so an
+        attribution-off pipeline emits v2 bytes unchanged, byte for byte.
+        ``version=3``: magic ``BRD3``, otherwise identical framing to v2
+        (u32 decompressed body length, DEFLATE stream of [u32 header
+        length, JSON header, per-stage delta-compressed column sections])
+        except the JSON header carries a ``causes`` list of wire-form
+        attributed root causes.  ``version=2``: magic ``BRD2``, same
+        framing, no causes (requesting it with causes attached raises
+        ``ValueError`` — the attribution block cannot be silently
+        dropped).  ``version=1``: magic ``BRD1``, u32 header length,
+        JSON header, then per stage the raw ``<f8/<i2/u1`` column
+        buffers in header order.  All versions are stateless per payload
+        and decoded by :meth:`from_bytes` off the magic alone (the
+        deflate body is validated against its declared length).  Column
+        values where ``present`` is False are encoded as 0.0 (the
+        decoder re-imposes the mask)."""
+        if version is None:
+            version = 3 if self.causes else 2
+        if version in (1, 2) and self.causes:
+            raise ValueError(
+                f"StepDelta carries {len(self.causes)} attributed causes; "
+                f"wire version {version} cannot encode them (use version 3 "
+                "or leave version unset)"
+            )
         if version == 1:
+            head = self._header_bytes()
             parts = [WIRE_V1_MAGIC, struct.pack("<I", len(head)), head]
             for s in self.stages:
                 parts.append(np.ascontiguousarray(s.starts, dtype="<f8").tobytes())
@@ -290,8 +330,9 @@ class StepDelta:
                     parts.append(self._canonical_column(s, name).tobytes())
                     parts.append(self._present_column(s, name).tobytes())
             return b"".join(parts)
-        if version != 2:
+        if version not in (2, 3):
             raise ValueError(f"unknown StepDelta wire version {version!r}")
+        head = self._header_bytes(with_causes=(version == 3))
         parts = [struct.pack("<I", len(head)), head]
         for s in self.stages:
             for col in (np.ascontiguousarray(s.starts, dtype="<f8"),
@@ -307,7 +348,8 @@ class StepDelta:
                     self._present_column(s, name).astype(bool)
                 ).tobytes())
         body = b"".join(parts)
-        return (WIRE_V2_MAGIC + struct.pack("<I", len(body))
+        magic = WIRE_V3_MAGIC if version == 3 else WIRE_V2_MAGIC
+        return (magic + struct.pack("<I", len(body))
                 + zlib.compress(body, 6))
 
     @staticmethod
@@ -319,12 +361,14 @@ class StepDelta:
             return 1
         if magic == WIRE_V2_MAGIC:
             return 2
+        if magic == WIRE_V3_MAGIC:
+            return 3
         raise WireFormatError(
             f"not a StepDelta wire buffer (bad magic {magic!r})"
         )
 
     @staticmethod
-    def _validated_header(head: bytes) -> dict:
+    def _validated_header(head: bytes, version: int = 2) -> dict:
         try:
             header = json.loads(head.decode())
         except (UnicodeDecodeError, json.JSONDecodeError) as e:
@@ -342,6 +386,23 @@ class StepDelta:
             raise WireFormatError(
                 f"StepDelta header missing/malformed host/seq/boot: {e}"
             ) from e
+        if version == 3:
+            causes = header.get("causes", [])
+            if not isinstance(causes, list) or not all(
+                isinstance(c, dict) for c in causes
+            ):
+                raise WireFormatError(
+                    "StepDelta v3 causes is not a list of objects"
+                )
+            if len(causes) > _MAX_WIRE_CAUSES:
+                raise WireFormatError(
+                    f"implausible attributed-cause count {len(causes)}"
+                )
+        elif "causes" in header:
+            raise WireFormatError(
+                f"StepDelta v{version} header carries a causes key "
+                "(attribution requires wire version 3)"
+            )
         for sh in header["stages"]:
             if not isinstance(sh, dict):
                 raise WireFormatError("StepDelta stage header is not an object")
@@ -370,10 +431,12 @@ class StepDelta:
 
     @classmethod
     def from_bytes(cls, buf: bytes) -> "StepDelta":
-        """Decode a v1 or v2 payload (dispatched on the magic).  Every
-        header-declared length is validated against the actual remaining
-        bytes before any buffer view is taken; a truncated, over-long, or
-        corrupt frame raises :class:`WireFormatError`."""
+        """Decode a v1, v2, or v3 payload (dispatched on the magic).
+        Every header-declared length is validated against the actual
+        remaining bytes before any buffer view is taken; a truncated,
+        over-long, or corrupt frame raises :class:`WireFormatError`.
+        A v3 payload additionally yields the header's attribution block
+        as ``causes`` (wire-form dicts, verbatim)."""
         buf = bytes(buf)
         if len(buf) < 8:
             raise WireFormatError(
@@ -381,10 +444,11 @@ class StepDelta:
             )
         version = cls.wire_version(buf)
         (length,) = struct.unpack_from("<I", buf, 4)
-        if version == 2:
+        if version >= 2:
             if length > _MAX_BODY_BYTES:
                 raise WireFormatError(
-                    f"StepDelta v2 declares an implausible {length}-byte body"
+                    f"StepDelta v{version} declares an implausible "
+                    f"{length}-byte body"
                 )
             try:
                 z = zlib.decompressobj()
@@ -393,22 +457,22 @@ class StepDelta:
                 body = z.decompress(buf[8:], length + 1)
             except zlib.error as e:
                 raise WireFormatError(
-                    f"corrupt StepDelta v2 compression stream: {e}"
+                    f"corrupt StepDelta v{version} compression stream: {e}"
                 ) from e
             if len(body) != length:
                 raise WireFormatError(
-                    f"StepDelta v2 body is {len(body)}+ bytes but the frame "
-                    f"declares {length}"
+                    f"StepDelta v{version} body is {len(body)}+ bytes but "
+                    f"the frame declares {length}"
                 )
             if not z.eof or z.unused_data:
                 raise WireFormatError(
-                    "StepDelta v2 compression stream is truncated or has "
-                    "trailing bytes"
+                    f"StepDelta v{version} compression stream is truncated "
+                    "or has trailing bytes"
                 )
             _need(len(body), 0, 4, "v2 header length")
             (hlen,) = struct.unpack_from("<I", body, 0)
             _need(len(body), 4, hlen, "v2 header")
-            header = cls._validated_header(body[4 : 4 + hlen])
+            header = cls._validated_header(body[4 : 4 + hlen], version)
             off = 4 + hlen
             stages = []
             for sh in header["stages"]:
@@ -441,14 +505,16 @@ class StepDelta:
                 ))
             if off != len(body):
                 raise WireFormatError(
-                    f"StepDelta v2 body has {len(body) - off} trailing bytes"
+                    f"StepDelta v{version} body has "
+                    f"{len(body) - off} trailing bytes"
                 )
             return cls(header["host"], int(header["seq"]), stages,
-                       boot=int(header.get("boot", 0)))
+                       boot=int(header.get("boot", 0)),
+                       causes=list(header.get("causes", [])))
 
         hlen = length
         _need(len(buf), 8, hlen, "v1 header")
-        header = cls._validated_header(buf[8 : 8 + hlen])
+        header = cls._validated_header(buf[8 : 8 + hlen], version)
         off = 8 + hlen
         stages = []
         for sh in header["stages"]:

@@ -434,7 +434,7 @@ class DeltaClient:
         self,
         address,
         *,
-        wire_version: int = 2,
+        wire_version: int | None = None,
         resend_cap: int = 1024,
         connect_timeout: float = 5.0,
         retry_interval: float = 0.2,
@@ -442,7 +442,9 @@ class DeltaClient:
     ) -> None:
         self.endpoint = Endpoint.parse(address)
         self.family, self.sockaddr = self.endpoint.family, self.endpoint.sockaddr
-        self.wire_version = int(wire_version)
+        # None = StepDelta.to_bytes auto-select: v2, upgraded to v3 only
+        # when the delta carries attributed causes.
+        self.wire_version = None if wire_version is None else int(wire_version)
         self.resend_cap = int(resend_cap)
         self.connect_timeout = float(connect_timeout)
         self.retry_interval = float(retry_interval)
@@ -853,16 +855,16 @@ class ShmRing:
 
 class RingSender:
     """Adapter giving :class:`ShmRing` the producer-side ``send(delta)``
-    surface of :class:`DeltaClient` (so ``ServeEngine(delta_sink=...)``
-    and the launcher treat socket and ring paths uniformly).  A full ring
+    surface of :class:`DeltaClient` (so ``Diagnosis.forward(...)`` and
+    the launcher treat socket and ring paths uniformly).  A full ring
     retries briefly, then sheds the delta (``shed`` counter) — the
     same-machine consumer draining each tick makes sustained fullness an
     aggregator stall, which telemetry must survive."""
 
-    def __init__(self, ring: ShmRing, *, wire_version: int = 2,
+    def __init__(self, ring: ShmRing, *, wire_version: int | None = None,
                  retry: float = 0.01) -> None:
         self.ring = ring
-        self.wire_version = int(wire_version)
+        self.wire_version = None if wire_version is None else int(wire_version)
         self.retry = float(retry)
         self.shed = 0
 

@@ -115,7 +115,7 @@ class TestWireFormatDoc:
 
     def test_exists_with_normative_sections(self):
         text = _read(WIRE)
-        for needle in ("BRD1", "BRD2", "present", "DEFLATE",
+        for needle in ("BRD1", "BRD2", "BRD3", "present", "DEFLATE",
                        "XOR", "Changed mask", "boot", "seq",
                        "At-least-once", "WireFormatError",
                        "DATA", "ACK", "trailing bytes"):
@@ -123,7 +123,20 @@ class TestWireFormatDoc:
 
     def test_both_versions_specified(self):
         text = _read(WIRE)
-        assert "Version 1" in text and "Version 2" in text
+        assert ("Version 1" in text and "Version 2" in text
+                and "Version 3" in text)
+
+    def test_attribution_block_specified(self):
+        """The v3 attribution block (ISSUE 8) is normative: an
+        implementer must find the auto-select rule, the v2-reader
+        compatibility statement, and the encode/decode error posture."""
+        text = _read(WIRE)
+        for needle in ("attribution block", "causes",
+                       "auto-select", "byte-identical",
+                       "v2-reader compatibility", "estimated_recovery_s",
+                       "cumulative_recovery_s", "ValueError",
+                       "repro.core.whatif.WhatIfReplayer"):
+            assert needle in text, f"wire_format.md lost {needle!r}"
 
     def test_forwarded_envelope_specified(self):
         """The BRDF forwarded-delta frame (ISSUE 7) is normative too: an
@@ -181,7 +194,20 @@ class TestOperationsDoc:
                        "--fleet-parent", "--fleet-journal", "fanout",
                        "journal", "Compaction", "effective_lease",
                        "lease_ceiling", "lease_multiplier",
-                       "Diagnosis", "DeprecationWarning"):
+                       "Diagnosis", "TypeError"):
+            assert needle in text, f"operations.md lost {needle!r}"
+
+    def test_recovery_ranking_section(self):
+        """The what-if attribution ops guide (ISSUE 8): an operator must
+        find how causes are priced, how the policy ranks and
+        budget-floors by the price, and the honest caveat about
+        concurrent stragglers."""
+        text = _read(OPS)
+        for needle in ("Reading the recovery ranking", "attribution=True",
+                       "estimated_recovery_s", "cumulative_recovery_s",
+                       "min_recovery_s", "peer mean", "critical path",
+                       "last_stage_recovery", "whatif_recovery",
+                       "scale/whatif_replay_16384", "exclusive"):
             assert needle in text, f"operations.md lost {needle!r}"
 
     def test_readme_links_here_for_rebaseline(self):
@@ -239,6 +265,13 @@ class TestHelpMatchesDocs:
         ("repro.ft.Rule", ("scope", "recurrence", "target")),
         ("repro.ft.Actuator", ("apply", "rollback", "actuator_noop")),
         ("repro.ft.GuardrailConfig", ("tuning",)),
+        ("repro.core.WhatIfReplayer", ("counterfactual", "critical-path",
+                                       "attribution=None", "stages()")),
+        ("repro.core.Attribution", ("peer mean", "critical-path",
+                                    "estimated_recovery_s",
+                                    "throughput_delta")),
+        ("repro.anomaly.loop.whatif_recovery", ("joint", "ab_compare",
+                                                "prediction")),
         ("repro.ft.supervisor", ("backoff", "jitter", "healthy")),
         ("repro.anomaly.ClosedLoopSim", ("stage", "policy", "cordoned")),
         ("repro.anomaly.loop", ("ab_compare", "step (stage) time",

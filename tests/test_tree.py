@@ -18,9 +18,9 @@ Pins the tentpole properties of the fan-in tree:
 - :class:`~repro.telemetry.transport.Endpoint` parsing of every
   historical address form plus the explicit prefixes;
 - the :class:`~repro.serve.Diagnosis` facade: one-mode validation,
-  telemetry binding errors, per-mode tick behavior, and the
-  ``ServeEngine`` deprecation shims (old kwargs warn but work; mixing
-  old and new raises).
+  telemetry binding errors, per-mode tick behavior, and the removal of
+  the pre-facade ``ServeEngine`` kwargs (passing them is a TypeError;
+  every removed combination has a Diagnosis equivalent).
 """
 from __future__ import annotations
 
@@ -545,47 +545,35 @@ class TestDiagnosisFacade:
             eng = self._engine(telem, diagnosis=Diagnosis.fleet(fresh_root()))
         assert eng.diagnosis.mode == "fleet"
 
-    def test_deprecated_kwargs_warn_but_work(self):
+    def test_removed_legacy_kwargs_raise_type_error(self):
+        """The pre-facade wiring kwargs completed their deprecation
+        cycle: passing any of them is now an unknown-kwarg TypeError,
+        not a warning."""
+        for kw in (
+            {"live_analyzer": BigRootsAnalyzer(JAX_FEATURES)},
+            {"fleet": fresh_root()},
+            {"fleet_step": False},
+            {"delta_sink": CollectSink()},
+            {"policy": object()},
+        ):
+            with pytest.raises(TypeError):
+                self._engine(StepTelemetry("h0", wire=True), **kw)
+
+    def test_diagnosis_facade_covers_legacy_roles(self):
+        """Every removed kwarg combination has a Diagnosis equivalent."""
         telem = StepTelemetry("h0", window=8, streaming=True)
-        with pytest.warns(DeprecationWarning, match="deprecated"):
-            eng = self._engine(
-                telem, live_analyzer=BigRootsAnalyzer(JAX_FEATURES)
-            )
+        eng = self._engine(
+            telem, diagnosis=Diagnosis.local(BigRootsAnalyzer(JAX_FEATURES))
+        )
         assert eng.diagnosis.mode == "local"
 
         agg = fresh_root()
-        with pytest.warns(DeprecationWarning):
-            eng = self._engine(
-                StepTelemetry("h0", wire=True), fleet=agg, fleet_step=False
-            )
+        eng = self._engine(StepTelemetry("h0", wire=True),
+                           diagnosis=Diagnosis.fleet(agg, drive=False))
         assert eng.diagnosis.mode == "fleet"
         assert eng.diagnosis.aggregator is agg
         assert eng.diagnosis.drive is False
 
-        with pytest.warns(DeprecationWarning):
-            eng = self._engine(StepTelemetry("h0", wire=True),
-                               delta_sink=CollectSink())
+        eng = self._engine(StepTelemetry("h0", wire=True),
+                           diagnosis=Diagnosis.forward(CollectSink()))
         assert eng.diagnosis.mode == "forward"
-
-    def test_mixing_old_and_new_raises(self):
-        with pytest.warns(DeprecationWarning):
-            with pytest.raises(ValueError, match="not both"):
-                self._engine(
-                    StepTelemetry("h0", wire=True),
-                    diagnosis=Diagnosis.fleet(fresh_root()),
-                    fleet=fresh_root(),
-                )
-
-    def test_legacy_fleet_plus_sink_still_raises(self):
-        with pytest.warns(DeprecationWarning):
-            with pytest.raises(ValueError, match="not both"):
-                self._engine(StepTelemetry("h0", wire=True),
-                             fleet=fresh_root(), delta_sink=CollectSink())
-
-    def test_legacy_inert_live_analyzer_stays_inert(self):
-        """The old surface silently ignored live_analyzer without a
-        streaming telemetry; the shim must not tighten that."""
-        with pytest.warns(DeprecationWarning):
-            eng = self._engine(StepTelemetry("h0"),
-                               live_analyzer=BigRootsAnalyzer(JAX_FEATURES))
-        assert eng.diagnosis is None

@@ -1,0 +1,485 @@
+"""What-if impact attribution: the counterfactual replay engine, the
+Attribution plumbing through stream/wire/policy, and the A/B validation.
+
+Pins the tentpole properties of the attribution pipeline:
+
+- attribution invariants (property-tested over randomized stages): every
+  estimate is non-negative; per stage the attributed recoveries sum to
+  at most the straggler excess over peer mean; a cause whose task has no
+  straggler row attributes exactly 0;
+- attribution off is byte-identical to the pre-attribution pipeline:
+  causeless StepDeltas encode as exact v2 bytes, unattributed cause
+  streams are never reordered by the policy, and the recovery guardrail
+  never fires on unattributed causes;
+- wire v3 (``BRD3``): round trip with the attribution block, auto
+  upgrade only when causes are present, v1/v2-with-causes refused, a
+  ``causes`` key smuggled into a v2 header refused;
+- attributed causes survive a fan-in tree hop **byte-identically**
+  (verbatim forward of the inner v3 payload);
+- :class:`RootCauseStream` severity escalation capped at
+  ``MAX_SEVERITY`` (soak), recovered time aggregated across
+  decay/re-emit;
+- policy ranking by estimated recovery + the ``min_recovery_s``
+  guardrail budget;
+- the what-if ranking matches the measured A/B ordering for the
+  cpu/skew scenarios (``repro.anomaly.loop``).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Attribution,
+    BigRootsAnalyzer,
+    FeatureKind,
+    JAX_FEATURES,
+    RootCause,
+    RootCauseStream,
+    SPARK_FEATURES,
+    SlidingStageWindow,
+    StageFrame,
+    WhatIfReplayer,
+)
+from repro.core.analyzer import (
+    attribution_from_wire,
+    attribution_to_wire,
+    cause_from_wire,
+    cause_to_wire,
+    synthesize_cause,
+)
+from repro.core.straggler import DEFAULT_STRAGGLER_THRESHOLD
+from repro.ft.policy import (
+    ActionKind,
+    GuardrailConfig,
+    PolicyEngine,
+    RecordingActuator,
+    Rule,
+)
+from repro.serve.fleet import FleetAggregator, TreeAggregator
+from repro.telemetry.events import (
+    StageDelta,
+    StepDelta,
+    WireFormatError,
+)
+
+
+def _window(durs, nodes, stage="s0"):
+    w = SlidingStageWindow(stage, SPARK_FEATURES)
+    for i, (d, n) in enumerate(zip(durs, nodes)):
+        w.add_row(f"t{i}", n, 0.0, float(d), features={"cpu": 0.2})
+    return w
+
+
+def _cause(task, stage="s0", node="n0", feature="cpu",
+           peer_groups=("inter",), attribution=None, severity=1):
+    return RootCause(task_id=task, stage_id=stage, node=node,
+                     feature=feature, kind=FeatureKind.RESOURCE, value=2.0,
+                     peer_groups=peer_groups, severity=severity,
+                     attribution=attribution)
+
+
+def _random_stage(rng, stage="s0"):
+    n = int(rng.integers(4, 40))
+    nodes = [f"n{int(rng.integers(0, 4))}" for _ in range(n)]
+    durs = rng.uniform(0.5, 2.0, n)
+    k = int(rng.integers(0, max(n // 4, 1)))
+    idx = rng.choice(n, size=k, replace=False) if k else []
+    for i in idx:
+        durs[i] *= rng.uniform(3.0, 10.0)
+    return durs, nodes
+
+
+class TestAttributionInvariants:
+    def test_non_negative_and_bounded_by_straggler_excess(self):
+        rng = np.random.default_rng(7)
+        for trial in range(30):
+            durs, nodes = _random_stage(rng)
+            w = _window(durs, nodes)
+            causes = [_cause(f"t{i}", peer_groups=pg)
+                      for i in range(len(durs))
+                      for pg in (("inter",), ("intra",), ("stage",))]
+            out = WhatIfReplayer().attribute(w, causes)
+            assert len(out) == len(causes)
+            total = 0.0
+            for c in out:
+                a = c.attribution
+                assert a is not None
+                assert a.estimated_recovery_s >= 0.0
+                assert a.throughput_delta >= 0.0
+                assert a.baseline_s >= 0.0
+                total += a.estimated_recovery_s
+            # Straggler excess over the stage's smallest peer mean is a
+            # generous upper bound on everything the replay may claim.
+            median = float(np.median(durs))
+            smask = durs > DEFAULT_STRAGGLER_THRESHOLD * median
+            excess = float(np.maximum(durs[smask] - durs.mean(), 0.0).sum()
+                           + np.maximum(durs[smask] - durs.min(), 0.0).sum())
+            assert total <= excess + 1e-9
+
+    def test_no_straggler_row_attributes_exactly_zero(self):
+        w = _window([1.0, 1.1, 0.9, 1.0, 6.0],
+                    ["n0", "n1", "n0", "n1", "n0"])
+        out = WhatIfReplayer().attribute(w, [_cause("t1")])
+        (c,) = out
+        assert c.attribution is not None
+        assert c.attribution.estimated_recovery_s == 0.0
+        assert c.attribution.tasks_rebased == 0
+
+    def test_straggler_recovery_matches_critical_path(self):
+        # One 10s straggler among 1s peers: rebasing it to the peer mean
+        # recovers makespan down to the next-longest end.
+        w = _window([1.0, 1.0, 1.0, 1.0, 10.0],
+                    ["n0", "n1", "n0", "n1", "n2"])
+        out = WhatIfReplayer().attribute(w, [_cause("t4", node="n2")])
+        (c,) = out
+        a = c.attribution
+        assert a.tasks_rebased == 1
+        assert a.estimated_recovery_s == pytest.approx(9.0)
+        assert a.baseline_s == pytest.approx(10.0)
+        assert a.throughput_delta == pytest.approx(0.9)
+
+    def test_shared_row_recovery_splits_equally(self):
+        w = _window([1.0, 1.0, 1.0, 1.0, 10.0],
+                    ["n0", "n1", "n0", "n1", "n2"])
+        out = WhatIfReplayer().attribute(
+            w, [_cause("t4", feature="cpu"), _cause("t4", feature="disk")]
+        )
+        recs = [c.attribution.estimated_recovery_s for c in out]
+        assert recs[0] == pytest.approx(recs[1])
+        assert sum(recs) == pytest.approx(9.0)
+
+    def test_absent_stage_left_unattributed(self):
+        w = _window([1.0, 1.0, 10.0], ["n0", "n1", "n2"])
+        out = WhatIfReplayer().attribute(
+            w, [_cause("t2", node="n2"), _cause("x", stage="other")]
+        )
+        assert out[0].attribution is not None
+        assert out[1].attribution is None
+
+    def test_trace_store_and_frame_sources(self):
+        from repro.core import TraceStore
+
+        store = TraceStore(SPARK_FEATURES)
+        for i, d in enumerate([1.0, 1.0, 1.0, 8.0]):
+            store.add_row(task_id=f"t{i}", stage_id="s0",
+                          node=f"n{i % 2}", start=0.0, end=d,
+                          locality=0, features={"cpu": 0.2})
+        out = WhatIfReplayer(SPARK_FEATURES).attribute(
+            store, [_cause("t3", node="n1")]
+        )
+        assert out[0].attribution.estimated_recovery_s > 0.0
+
+    def test_jax_backend_matches_numpy(self):
+        pytest.importorskip("jax")
+        rng = np.random.default_rng(11)
+        durs, nodes = _random_stage(rng)
+        w = _window(durs, nodes)
+        causes = [_cause(f"t{i}") for i in range(len(durs))]
+        out_np = WhatIfReplayer(backend="numpy").attribute(w, causes)
+        out_jx = WhatIfReplayer(backend="jax").attribute(w, causes)
+        for a, b in zip(out_np, out_jx):
+            assert a.attribution.estimated_recovery_s == pytest.approx(
+                b.attribution.estimated_recovery_s)
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="backend"):
+            WhatIfReplayer(backend="pallas9000")
+
+
+class TestAttributionWire:
+    def test_attribution_round_trip(self):
+        a = Attribution(estimated_recovery_s=1.5, throughput_delta=0.1,
+                        cumulative_recovery_s=3.0, tasks_rebased=1,
+                        baseline_s=15.0)
+        assert attribution_from_wire(attribution_to_wire(a)) == a
+
+    def test_cause_round_trip_with_and_without_attribution(self):
+        a = Attribution(estimated_recovery_s=1.5, throughput_delta=0.1,
+                        cumulative_recovery_s=3.0, tasks_rebased=1,
+                        baseline_s=15.0)
+        for c in (_cause("t0"), _cause("t0", attribution=a),
+                  synthesize_cause(task_id="h/dropout", stage_id="s",
+                                   node="h", feature="host_dropout",
+                                   value=9.0, guidance="g", severity=2)):
+            assert cause_from_wire(cause_to_wire(c)) == c
+
+    def test_causeless_delta_encodes_exact_v2_bytes(self):
+        rng = np.random.default_rng(3)
+        for seq in range(10):
+            n = int(rng.integers(0, 20))
+            d = StepDelta("h0", seq + 1, [StageDelta(
+                "s0", [f"t{i}" for i in range(n)], ["h0"] * n,
+                rng.uniform(0, 10, n), rng.uniform(10, 20, n),
+                np.zeros(n, np.int16),
+                {"cpu": rng.random(n)}, {"cpu": np.ones(n, bool)},
+            )], boot=7)
+            auto = d.to_bytes()
+            assert auto == d.to_bytes(version=2)
+            assert auto[:4] == b"BRD2"
+            assert StepDelta.from_bytes(auto).causes == []
+
+    def test_v3_round_trip_carries_causes(self):
+        wire = [cause_to_wire(_cause("t0", attribution=Attribution(
+            estimated_recovery_s=2.0, throughput_delta=0.2,
+            cumulative_recovery_s=2.0, tasks_rebased=1, baseline_s=10.0)))]
+        d = StepDelta("h0", 1, [], boot=7, causes=wire)
+        buf = d.to_bytes()
+        assert buf[:4] == b"BRD3"
+        assert StepDelta.wire_version(buf) == 3
+        rt = StepDelta.from_bytes(buf)
+        assert rt.causes == wire
+        assert cause_from_wire(rt.causes[0]).attribution is not None
+
+    def test_explicit_v3_allowed_without_causes(self):
+        buf = StepDelta("h0", 1, [], boot=7).to_bytes(version=3)
+        assert buf[:4] == b"BRD3"
+        assert StepDelta.from_bytes(buf).causes == []
+
+    def test_v1_v2_with_causes_refused(self):
+        d = StepDelta("h0", 1, [], causes=[cause_to_wire(_cause("t0"))])
+        for v in (1, 2):
+            with pytest.raises(ValueError, match="version 3"):
+                d.to_bytes(version=v)
+
+    def test_causes_key_smuggled_into_v2_header_refused(self):
+        import json
+        import struct
+        import zlib
+
+        head = json.dumps({"host": "h0", "seq": 1, "boot": 0,
+                           "stages": [], "causes": []},
+                          separators=(",", ":")).encode()
+        body = struct.pack("<I", len(head)) + head
+        buf = (b"BRD2" + struct.pack("<I", len(body))
+               + zlib.compress(body, 6))
+        with pytest.raises(WireFormatError, match="causes"):
+            StepDelta.from_bytes(buf)
+
+    def test_non_list_causes_refused(self):
+        import json
+        import struct
+        import zlib
+
+        head = json.dumps({"host": "h0", "seq": 1, "boot": 0,
+                           "stages": [], "causes": {"not": "a list"}},
+                          separators=(",", ":")).encode()
+        body = struct.pack("<I", len(head)) + head
+        buf = (b"BRD3" + struct.pack("<I", len(body))
+               + zlib.compress(body, 6))
+        with pytest.raises(WireFormatError, match="causes"):
+            StepDelta.from_bytes(buf)
+
+
+class _Pipe:
+    def __init__(self) -> None:
+        self.sent: list[bytes] = []
+
+    def send_bytes(self, payload: bytes, boot: int, seq: int) -> bool:
+        self.sent.append(payload)
+        return True
+
+
+class TestTreeHopByteIdentity:
+    def test_attributed_payload_forwards_verbatim(self, tmp_path):
+        from repro.telemetry.events import ForwardedDelta
+
+        wire = [cause_to_wire(_cause("t0", attribution=Attribution(
+            estimated_recovery_s=2.0, throughput_delta=0.2,
+            cumulative_recovery_s=2.0, tasks_rebased=1, baseline_s=10.0)))]
+        n = 4
+        leaf = StepDelta("h0", 1, [StageDelta(
+            "s0", [f"t{i}" for i in range(n)], ["h0"] * n,
+            np.zeros(n), np.ones(n), np.zeros(n, np.int16),
+            {"cpu": np.full(n, 0.2)}, {"cpu": np.ones(n, bool)},
+        )], boot=7, causes=wire)
+        raw = leaf.to_bytes()
+        assert raw[:4] == b"BRD3"
+
+        pipe = _Pipe()
+        mid = TreeAggregator(JAX_FEATURES, name="agg0", parent=pipe,
+                             journal=str(tmp_path / "j.bin"))
+        mid.ingest(raw)
+        mid.pump()
+        assert len(pipe.sent) == 1
+        fwd = ForwardedDelta.from_bytes(pipe.sent[0])
+        assert fwd.payloads == [raw]          # byte-identical inner hop
+
+        root = FleetAggregator(JAX_FEATURES)
+        root.ingest(pipe.sent[0])
+        assert root.remote_causes_ingested == 1
+        (c,) = root.step()
+        assert c.attribution is not None
+        assert c.attribution.estimated_recovery_s == pytest.approx(2.0)
+
+
+class TestStreamAggregation:
+    def test_severity_cap_soak(self):
+        from repro.core import StageAnalysis
+
+        class Scripted:
+            def __init__(self):
+                self.calls = 0
+
+            def analyze_stage(self, source):
+                self.calls += 1
+                hot = self.calls % 2 == 1     # decay fully between sightings
+                return StageAnalysis(
+                    "s0", 1, [], [_cause("t0")] if hot else [], 1.0)
+
+        stream = RootCauseStream(Scripted(), object(), decay_steps=1)
+        severities = []
+        for _ in range(60):
+            severities.extend(c.severity for c in stream.step())
+        assert max(severities) == RootCauseStream.MAX_SEVERITY == 8
+        assert stream.state(("t0", "cpu")).severity == 8
+
+    def test_max_severity_override_and_validation(self):
+        assert RootCauseStream(object(), object(),
+                               max_severity=3).max_severity == 3
+        with pytest.raises(ValueError, match="max_severity"):
+            RootCauseStream(object(), object(), max_severity=0)
+
+    def test_recovered_time_accumulates_across_reemits(self):
+        from repro.core import StageAnalysis
+
+        class Scripted:
+            def __init__(self):
+                self.calls = 0
+
+            def analyze_stage(self, source):
+                self.calls += 1
+                hot = self.calls in (1, 5)
+                return StageAnalysis(
+                    "s0", 1, [], [_cause("t0")] if hot else [], 1.0)
+
+        class FixedAttributor:
+            def attribute(self, source, causes):
+                a = Attribution(estimated_recovery_s=2.0,
+                                throughput_delta=0.1,
+                                cumulative_recovery_s=2.0,
+                                tasks_rebased=1, baseline_s=20.0)
+                from dataclasses import replace
+                return [replace(c, attribution=a) for c in causes]
+
+        stream = RootCauseStream(Scripted(), object(), decay_steps=2,
+                                 attributor=FixedAttributor())
+        (first,) = stream.step()
+        assert first.attribution.cumulative_recovery_s == pytest.approx(2.0)
+        for _ in range(3):
+            stream.step()
+        (again,) = stream.step()           # re-emit after decay
+        assert again.severity == 2
+        assert again.attribution.cumulative_recovery_s == pytest.approx(4.0)
+        assert stream.recovered_total == pytest.approx(4.0)
+
+    def test_no_attributor_emits_unattributed(self):
+        from repro.core import StageAnalysis
+
+        class Scripted:
+            def analyze_stage(self, source):
+                return StageAnalysis("s0", 1, [], [_cause("t0")], 1.0)
+
+        (c,) = RootCauseStream(Scripted(), object()).step()
+        assert c.attribution is None
+
+
+class TestPolicyRecovery:
+    def _attr(self, rec):
+        return Attribution(estimated_recovery_s=rec, throughput_delta=0.0,
+                           cumulative_recovery_s=rec, tasks_rebased=1,
+                           baseline_s=10.0)
+
+    def _rules(self):
+        return (Rule("spec", ("cpu",), ActionKind.SPECULATE_TASK,
+                     scope="task", cooldown=0),)
+
+    def test_ranking_by_recovery_when_attributed(self):
+        eng = PolicyEngine(self._rules(), RecordingActuator())
+        causes = [
+            _cause("small", attribution=self._attr(1.0)),
+            _cause("big", attribution=self._attr(9.0)),
+            _cause("mid", attribution=self._attr(5.0)),
+        ]
+        acted = eng.step(causes, live_hosts=4)
+        assert [a.target for a in acted] == ["big", "mid", "small"]
+
+    def test_unattributed_stream_order_and_log_unchanged(self):
+        causes = [_cause("a"), _cause("b"), _cause("c")]
+        plain = PolicyEngine(self._rules(), RecordingActuator())
+        acted = plain.step(list(causes), live_hosts=4)
+        assert [a.target for a in acted] == ["a", "b", "c"]
+        # min_recovery_s must not perturb an unattributed stream's
+        # decision log at all (byte-identity of attribution-off).
+        budgeted = PolicyEngine(
+            self._rules(), RecordingActuator(),
+            guardrails=GuardrailConfig(min_recovery_s=100.0))
+        budgeted.step(list(causes), live_hosts=4)
+        assert plain.decision_log_bytes() == budgeted.decision_log_bytes()
+
+    def test_min_recovery_guardrail_vetoes_cheap_causes(self):
+        eng = PolicyEngine(
+            self._rules(), RecordingActuator(),
+            guardrails=GuardrailConfig(min_recovery_s=3.0))
+        acted = eng.step([
+            _cause("cheap", attribution=self._attr(1.0)),
+            _cause("worth", attribution=self._attr(5.0)),
+        ], live_hosts=4)
+        assert [a.target for a in acted] == ["worth"]
+        vetoes = [e for e in eng.decision_log()
+                  if e.get("guardrail") == "min_recovery"]
+        assert len(vetoes) == 1 and vetoes[0]["target"] == "cheap"
+
+
+class TestFleetAttribution:
+    def test_fleet_off_emits_unattributed_on_emits_priced(self):
+        def feed(agg):
+            out = []
+            for step in range(8):
+                n = 6
+                slow = step >= 2
+                durs = [1.0] * (n - 1) + ([5.0] if slow else [1.0])
+                d = StepDelta("h0", step + 1, [StageDelta(
+                    "s0", [f"t{step}-{i}" for i in range(n)],
+                    [f"n{i % 3}" for i in range(n)],
+                    np.full(n, float(step)),
+                    np.float64(step) + np.asarray(durs),
+                    np.zeros(n, np.int16),
+                    {"cpu": np.asarray([0.2] * (n - 1)
+                                       + ([0.95] if slow else [0.2]))},
+                    {"cpu": np.ones(n, bool)},
+                )], boot=1)
+                agg.ingest(d)
+                out.extend(agg.step())
+            return out
+
+        plain = feed(FleetAggregator(JAX_FEATURES,
+                                     BigRootsAnalyzer(JAX_FEATURES)))
+        priced = feed(FleetAggregator(JAX_FEATURES,
+                                      BigRootsAnalyzer(JAX_FEATURES),
+                                      attribution=True))
+        assert plain and priced
+        assert all(c.attribution is None for c in plain)
+        assert any(c.attribution is not None
+                   and c.attribution.estimated_recovery_s > 0
+                   for c in priced)
+        # Same diagnosis either way — attribution only decorates.
+        assert [c.key for c in plain] == [c.key for c in priced]
+
+
+class TestWhatIfValidatesAB:
+    @pytest.mark.slow
+    def test_ranking_matches_measured_ab_ordering(self):
+        from repro.anomaly.loop import ab_compare, whatif_recovery
+
+        measured = {}
+        predicted = {}
+        for sc in ("cpu", "skew"):
+            ab = ab_compare(sc, seed=0)
+            measured[sc] = (ab.baseline.mean_step_time
+                            - ab.mitigated.mean_step_time)
+            predicted[sc] = whatif_recovery(sc, seed=0)
+            assert measured[sc] > 0
+            assert predicted[sc] > 0
+        rank = lambda d: sorted(d, key=d.__getitem__, reverse=True)  # noqa: E731
+        assert rank(predicted) == rank(measured)
