@@ -931,3 +931,34 @@ def whatif_replay(n_hosts: int = 16384, reps: int = 5):
     rows = [("whatif_replay_16384", us)]
     csv = [("scale/whatif_replay_16384", us, derived)]
     return rows, csv
+
+
+def scenario_fleet(n_hosts: int = 1024):
+    """Deterministic fleet scenario engine at bench scale: one full
+    ``rack_degrade`` run over ``n_hosts`` simulated hosts (64 racks,
+    depth-2 tree, fanout 128) through the *real*
+    TreeAggregator/BigRootsAnalyzer/PolicyEngine stack at simulated
+    time — a ~40-simulated-second rack outage replayed in one wall-clock
+    run.  ``scale/scenario_rack_degrade_1024`` (CI-gated) is µs for the
+    whole run: the budget that keeps the CI scenarios lane honest as the
+    engine or the diagnosis stack grows.
+
+    The derived column asserts the end-to-end row-conservation invariant
+    (``rows_sent == rows_ingested + rows_lost_crash``) held at bench
+    scale and records the cause volume the degraded rack produced.
+    """
+    from repro.anomaly.scenario import run_scenario
+
+    with Timer() as t:
+        r = run_scenario("rack_degrade", hosts=n_hosts,
+                         racks=max(n_hosts // 16, 1),
+                         topology="tree", fanout=128)
+    c = r.counters
+    us = t.seconds * 1e6
+    conserved = c["rows_sent"] == c["rows_ingested"] + c["rows_lost_crash"]
+    derived = (f"conserved={int(conserved)};causes={c['causes']};"
+               f"rows={c['rows_ingested']};dropouts={c['host_dropouts']};"
+               f"dups={c['duplicate_drops']}")
+    rows = [(f"scenario_rack_degrade_{n_hosts}", us)]
+    csv = [(f"scale/scenario_rack_degrade_{n_hosts}", us, derived)]
+    return rows, csv

@@ -37,7 +37,10 @@ restarted against the same journal — it must resume watermarks and
 re-forward its unacked tail, so the root still sees **exactly**
 ``hosts × steps`` rows (zero lost, zero duplicated; redelivery surfaces
 only as inner ``duplicate_drops``) and a cause stream byte-identical to
-in-process replay of the received envelopes.
+in-process replay of the received envelopes.  Both the kill and the
+restart trigger on *acked-delta progress* observed at the root (never a
+wall-clock delay), so the interleaving is the same on an idle laptop and
+a loaded CI runner.
 
 Run it::
 
@@ -432,8 +435,22 @@ def run_tree_parent(args) -> int:
     agg = fresh_aggregator(lease=args.lease)
     events: list[tuple[str, bytes | None]] = []
     live_causes = []
-    killed_at = None
+    killed = False
     restarted = False
+    progress_base = 0
+
+    def survivor_progress() -> int:
+        """Acked-delta progress the root has seen from hosts on the
+        *surviving* aggregators — the load-independent clock that decides
+        when the killed aggregator respawns.  Wall-clock delays here are
+        exactly what flakes under a loaded CI box: the surviving
+        sub-fleet may have shipped 2 deltas or 20 in the same 0.3s."""
+        total = 0
+        for i in range(args.hosts):
+            if agg_of(i, args.aggs, args.hosts) != kill_agg:
+                total += max(agg.host_seq.get(f"h{i}", {}).values(),
+                             default=0)
+        return total
 
     def drain() -> None:
         for p in root.drain():
@@ -450,16 +467,25 @@ def run_tree_parent(args) -> int:
         drain()
         tick()
         seen = max(agg.host_seq.get(straggler, {}).values(), default=0)
-        if (args.agg_kill_after > 0 and killed_at is None
+        if (args.agg_kill_after > 0 and not killed
                 and seen >= args.agg_kill_after):
             print(f"[tree] SIGKILL agg{kill_agg} after the root saw "
                   f"{seen} deltas from {straggler}")
             agg_procs[kill_agg].kill()
             agg_procs[kill_agg].wait()
-            killed_at = time.time()
-        if (killed_at is not None and not restarted
-                and time.time() - killed_at >= args.agg_restart_delay):
-            print(f"[tree] restarting agg{kill_agg} from its journal")
+            killed = True
+            progress_base = survivor_progress()
+        survivors_exist = any(
+            agg_of(i, args.aggs, args.hosts) != kill_agg
+            for i in range(args.hosts)
+        )
+        if (killed and not restarted
+                and (not survivors_exist  # nothing can progress: respawn now
+                     or survivor_progress() - progress_base
+                     >= args.agg_restart_after)):
+            print(f"[tree] restarting agg{kill_agg} from its journal "
+                  f"(survivors advanced "
+                  f"{survivor_progress() - progress_base} deltas)")
             agg_procs[kill_agg] = subprocess.Popen(agg_cmd(kill_agg))
             restarted = True
         hosts_done = all(p.poll() is not None for p in host_procs.values())
@@ -542,9 +568,13 @@ def main() -> int:
     ap.add_argument("--agg-kill-after", type=int, default=8,
                     help="SIGKILL the straggler's aggregator once the root "
                          "has seen this many of its deltas (0 disables)")
-    ap.add_argument("--agg-restart-delay", type=float, default=0.3,
-                    help="seconds before the killed aggregator is respawned "
-                         "against the same journal")
+    ap.add_argument("--agg-restart-after", type=int, default=4,
+                    help="respawn the killed aggregator once the root has "
+                         "seen this many MORE acked deltas from hosts on "
+                         "the surviving aggregators — progress-derived, so "
+                         "the kill/restart interleaving is identical on an "
+                         "idle box and a loaded CI runner (a wall-clock "
+                         "delay here is what used to flake)")
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--agg-child", action="store_true",
                     help=argparse.SUPPRESS)

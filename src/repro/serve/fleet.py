@@ -149,8 +149,19 @@ class FleetAggregator:
     transports stay safe without idempotence bookkeeping downstream —
     provided delivery is in-order per host (TCP-like FIFO): the watermark
     cannot tell a delayed first delivery from a redelivery, so a
-    transport that *reorders* must not be used without resequencing,
-    while a delta under a boot not seen before is a restarted host —
+    transport that *reorders* must not be used without resequencing —
+    or set ``reorder_window > 0`` and the aggregator resequences
+    *bounded* reordering itself: a leaf delta arriving with a seq gap
+    (``seq > watermark + 1``; an unseen boot reorders from base 0, so
+    even a boot's first frames resequence) is stashed per ``(host, boot)``
+    (``reorder_holds``) instead of applied, and drains in seq order as
+    the gap fills (an at-least-once transport resends the missing delta,
+    so the gap converges).  A stash that outgrows the window gives up on
+    the gap and flushes in seq order (``reorder_flushes``) — bounded
+    memory beats waiting on a frame the sender shed.  Call
+    :meth:`flush_reorders` at end of stream so a trailing gap cannot
+    strand stashed rows.  A delta under a boot not seen before is a
+    restarted host —
     accepted immediately (``host_restarts``), with no dependence on clock
     direction (a restart after a backward NTP step or snapshot restore is
     not exiled).  Steps a host re-executes after restoring from a
@@ -198,6 +209,7 @@ class FleetAggregator:
         lease_alpha: float = 0.25,
         clock=time.time,
         policy=None,
+        reorder_window: int = 0,
     ) -> None:
         self.schema = schema
         self.analyzer = analyzer if analyzer is not None else BigRootsAnalyzer(schema)
@@ -234,6 +246,12 @@ class FleetAggregator:
         self.host_restarts = 0
         self.stages_dropped = 0
         self.stale_stage_drops = 0
+        # Bounded resequencing of leaf deltas (see class docstring):
+        # (host, boot) → {seq: StepDelta} awaiting their gap to fill.
+        self.reorder_window = int(reorder_window)
+        self._reorder_stash: dict[tuple[str, int], dict[int, StepDelta]] = {}
+        self.reorder_holds = 0
+        self.reorder_flushes = 0
         # Attributed causes carried in accepted v3 deltas (wire-form
         # dicts), drained into the next step()'s emissions: a leaf's
         # priced findings ride the same payloads as its rows.
@@ -285,6 +303,24 @@ class FleetAggregator:
             # re-earns its pre-crash seq, and no wall-clock comparison (a
             # restart after a backward clock step is not exiled).
             self.host_restarts += 1
+        if (self.reorder_window > 0
+                and delta.seq > (last_seq or 0) + 1):
+            # Seq gap on a reordering transport: stash until the gap
+            # fills (the missing delta's resend) or the stash outgrows
+            # the window.  An unseen boot reorders from base 0 — seqs
+            # start at 1, so a first arrival of seq > 1 means earlier
+            # frames may still be in flight; anchoring the watermark on
+            # it would drop their resends as duplicates.  A genuine
+            # late join (attaching mid-stream) stalls at most one
+            # window, then the flush anchors it.
+            key = (delta.host, delta.boot)
+            stash = self._reorder_stash.setdefault(key, {})
+            if delta.seq not in stash:
+                stash[delta.seq] = delta
+                self.reorder_holds += 1
+            if len(stash) > self.reorder_window:
+                return self._flush_reorder_key(key)
+            return 0
         if self._pruned:
             live_stages = [s for s in delta.stages
                            if s.stage_id not in self._pruned]
@@ -311,6 +347,8 @@ class FleetAggregator:
         self._note_alive(delta.host, delta.stages)
         self._on_accept(delta, raw)
         self._prune_stages()
+        if self._reorder_stash:
+            rows += self._drain_reorder(delta.host, delta.boot)
         return rows
 
     def _ingest_forwarded(self, raw: bytes, depth: int) -> int:
@@ -344,6 +382,53 @@ class FleetAggregator:
         while len(boots) > self._MAX_BOOTS_PER_HOST:
             del boots[next(iter(boots))]
         self._note_alive(fwd.host, ())
+        return rows
+
+    def _drain_reorder(self, host: str, boot: int) -> int:
+        """Apply the stashed delta that the just-committed watermark made
+        contiguous, if any (its own ingest chains the next one)."""
+        key = (host, boot)
+        stash = self._reorder_stash.get(key)
+        if not stash:
+            self._reorder_stash.pop(key, None)
+            return 0
+        nxt = stash.pop(self.host_seq[host][boot] + 1, None)
+        if not stash:
+            del self._reorder_stash[key]
+        if nxt is None:
+            return 0
+        return self.ingest(nxt)
+
+    def _flush_reorder_key(self, key: tuple[str, int]) -> int:
+        """Give up on ``key``'s gap: apply its stash in seq order,
+        abandoning the missing seqs (counted once in
+        ``reorder_flushes``)."""
+        stash = self._reorder_stash.pop(key, None)
+        if not stash:
+            return 0
+        self.reorder_flushes += 1
+        host, boot = key
+        rows = 0
+        for seq in sorted(stash):
+            boots = self.host_seq.setdefault(host, {})
+            last = boots.get(boot)
+            if last is None or last < seq - 1:
+                # Abandon the gap below this delta.  Anchoring an unseen
+                # boot here (last is None) also counts its restart, and
+                # keeps the re-ingest below from re-stashing the delta.
+                if last is None and boots:
+                    self.host_restarts += 1
+                boots[boot] = seq - 1
+            rows += self.ingest(stash[seq])
+        return rows
+
+    def flush_reorders(self) -> int:
+        """Apply every stashed out-of-order delta in seq order,
+        abandoning unfilled gaps — call at end of stream so a trailing
+        gap cannot strand rows.  Returns rows applied."""
+        rows = 0
+        for key in list(self._reorder_stash):
+            rows += self._flush_reorder_key(key)
         return rows
 
     def _note_alive(self, host: str, stages) -> None:
@@ -794,11 +879,15 @@ class TreeAggregator(FleetAggregator):
         forward_batch: int = 64,
         journal_compact_bytes: int = 1 << 20,
         fsync: bool = False,
+        boot: int | None = None,
         **kwargs,
     ) -> None:
         super().__init__(schema, analyzer, **kwargs)
         self.name = str(name)
-        self.boot = time.time_ns()
+        # Incarnation stamp on forwarded envelopes.  Wall nanoseconds by
+        # default; deterministic harnesses inject one (each restart must
+        # still pass a *fresh* boot — the parent's dedup keys on it).
+        self.boot = time.time_ns() if boot is None else int(boot)
         self.forward_batch = int(forward_batch)
         self.journal_compact_bytes = int(journal_compact_bytes)
         self._fwd_seq = 0

@@ -746,6 +746,7 @@ class StepTelemetry:
         stream_quantile: float = 0.9,
         wire: bool = False,
         wire_pending_cap: int = 65536,
+        boot: int | None = None,
     ) -> None:
         self.node = node
         self.timeline = timeline
@@ -775,7 +776,10 @@ class StepTelemetry:
         self.wire = wire
         self.wire_pending_cap = max(int(wire_pending_cap), 1)
         self.wire_overflow_drops = 0
-        self.boot = time.time_ns()
+        # ``boot`` defaults to the wall nanosecond stamp; deterministic
+        # harnesses (repro.anomaly.scenario) inject one so a replay is
+        # byte-identical.
+        self.boot = time.time_ns() if boot is None else int(boot)
         self._pending: dict[str, list[tuple]] = {}
         self._delta_seq = 0
         self._overflow_warned = False

@@ -238,13 +238,37 @@ class DeltaServer:
     ownership).  In drain mode acks are sent from the draining thread;
     the per-connection reader threads never write, so no send lock is
     needed in either mode.
+
+    Fault injection (``fault``): an optional hook called once per
+    received DATA frame with ``(boot, seq, payload)``, returning one of
+
+    - ``"pass"`` — deliver normally (also the meaning of any unknown
+      verdict, so a buggy hook degrades to a no-op);
+    - ``"drop"`` — discard the frame *without acking* and sever the
+      connection, modelling receiver-side loss: the client's resend
+      contract replays the unacked tail on reconnect;
+    - ``"dup"`` — enqueue the payload twice (one ack), modelling
+      at-least-once duplication — the aggregator's ``(boot, seq)``
+      watermark absorbs the copy;
+    - ``"reorder"`` — hold the frame back and enqueue it *after* the
+      next frame from the same connection, modelling a reordering
+      channel.  Downstream needs
+      :class:`~repro.serve.fleet.FleetAggregator` ``reorder_window > 0``
+      to reconstruct the gap, otherwise the late frame is (by contract)
+      dropped as a duplicate.
+
+    Every non-pass verdict is counted in ``faults_injected``.  The hook
+    exists for tests and the scenario engine
+    (:mod:`repro.anomaly.scenario`); production servers leave it None.
     """
 
     def __init__(self, address, *, backlog: int = 16,
-                 ack: str = "enqueue") -> None:
+                 ack: str = "enqueue", fault=None) -> None:
         if ack not in ("enqueue", "drain"):
             raise ValueError(f"unknown ack mode {ack!r}")
         self.ack_mode = ack
+        self.fault = fault
+        self.faults_injected = 0
         self.endpoint = Endpoint.parse(address)
         self.family = self.endpoint.family
         self._sock = socket.socket(self.family, socket.SOCK_STREAM)
@@ -293,6 +317,17 @@ class DeltaServer:
     def _conn_loop(self, conn: socket.socket) -> None:
         # One reader thread per connection is the only writer of its acks,
         # so no send lock is needed here.
+        held: list[tuple[int, int, bytes]] = []  # "reorder" fault holdback
+
+        def enqueue(boot: int, seq: int, payload: bytes) -> None:
+            if self.ack_mode == "enqueue":
+                self._queue.put((payload, None))
+                _send_frame(conn, FRAME_ACK, _BOOT_SEQ.pack(boot, seq))
+            else:
+                self._queue.put((payload, self._deferred_ack(conn, boot, seq)))
+            self.frames_received += 1
+            self.bytes_received += len(payload)
+
         try:
             while True:
                 frame = _read_frame(conn)
@@ -304,16 +339,33 @@ class DeltaServer:
                     return  # protocol violation: drop the connection
                 boot, seq = _BOOT_SEQ.unpack_from(body, 0)
                 payload = body[_BOOT_SEQ.size:]
-                if self.ack_mode == "enqueue":
+                verdict = (self.fault(boot, seq, payload)
+                           if self.fault is not None else "pass")
+                if verdict == "drop":
+                    # Receiver-side loss: no enqueue, no ack — sever so
+                    # the client replays the unacked tail on reconnect.
+                    self.faults_injected += 1
+                    return
+                if verdict == "reorder":
+                    self.faults_injected += 1
+                    held.append((boot, seq, payload))
+                    continue
+                enqueue(boot, seq, payload)
+                if verdict == "dup":
+                    self.faults_injected += 1
                     self._queue.put((payload, None))
-                    _send_frame(conn, FRAME_ACK, _BOOT_SEQ.pack(boot, seq))
-                else:
-                    self._queue.put((payload, self._deferred_ack(conn, boot, seq)))
-                self.frames_received += 1
-                self.bytes_received += len(payload)
+                while held:
+                    enqueue(*held.pop(0))
         except (TransportError, OSError):
             self.frame_errors += 1
         finally:
+            # A frame still held back when the connection dies is
+            # enqueued anyway — holdback reorders, it must never lose.
+            for boot, seq, payload in held:
+                try:
+                    enqueue(boot, seq, payload)
+                except OSError:
+                    self._queue.put((payload, None))
             with self._lock:
                 if conn in self._conns:
                     self._conns.remove(conn)
@@ -428,6 +480,18 @@ class DeltaClient:
     untouched): an aggregator that stops draining fills the TCP window
     and the send fails over to the resend buffer instead of hanging the
     caller's step loop.
+
+    ``clock`` (default ``time.monotonic``) is the timebase for reconnect
+    rate-limiting and the ``flush`` deadline — inject a simulated clock
+    (:mod:`repro.anomaly.scenario`, tests) to run resend timing at
+    simulated time; the default keeps wall-clock behavior byte-identical.
+    ``fault`` is an optional sender-side hook called once per first
+    transmission with ``(boot, seq, payload)``: ``"drop"`` buffers the
+    frame but severs the connection instead of sending (the frame goes
+    out with the reconnect replay — sender-side loss), ``"dup"``
+    transmits the frame twice; anything else passes.  Replayed frames are
+    never faulted, so every injected loss converges.  Non-pass verdicts
+    count in ``faults_injected``.
     """
 
     def __init__(
@@ -439,6 +503,8 @@ class DeltaClient:
         connect_timeout: float = 5.0,
         retry_interval: float = 0.2,
         send_timeout: float = 5.0,
+        clock=time.monotonic,
+        fault=None,
     ) -> None:
         self.endpoint = Endpoint.parse(address)
         self.family, self.sockaddr = self.endpoint.family, self.endpoint.sockaddr
@@ -449,6 +515,9 @@ class DeltaClient:
         self.connect_timeout = float(connect_timeout)
         self.retry_interval = float(retry_interval)
         self.send_timeout = float(send_timeout)
+        self.clock = clock
+        self.fault = fault
+        self.faults_injected = 0
         self._sock: socket.socket | None = None
         self._reader: threading.Thread | None = None
         self._gen = 0  # bumps per (re)connect so stale readers exit
@@ -507,10 +576,23 @@ class DeltaClient:
                 # including this frame; sending it again here would just
                 # burn a duplicate on the dedup watermark.
                 return True
+            verdict = (self.fault(boot, seq, payload)
+                       if self.fault is not None else "pass")
+            if verdict == "drop":
+                # Sender-side loss: the frame stays buffered; severing
+                # the link makes the resend contract deliver it with the
+                # next reconnect replay.
+                self.faults_injected += 1
+                self._disconnect_locked()
+                return False
             try:
                 _send_frame(self._sock, FRAME_DATA, frame)
                 self.frames_sent += 1
                 self.bytes_sent += len(payload)
+                if verdict == "dup":
+                    self.faults_injected += 1
+                    _send_frame(self._sock, FRAME_DATA, frame)
+                    self.frames_sent += 1
                 return True
             except OSError:
                 self._disconnect_locked()
@@ -519,10 +601,10 @@ class DeltaClient:
     def flush(self, timeout: float = 30.0) -> bool:
         """Block until every buffered frame is acked (reconnecting and
         replaying as needed).  Returns False on timeout."""
-        deadline = time.monotonic() + timeout
+        deadline = self.clock() + timeout
         with self._lock:
             while self._unacked:
-                if time.monotonic() >= deadline:
+                if self.clock() >= deadline:
                     return False
                 if self._sock is None:
                     self._next_retry = 0.0  # flush retries eagerly
@@ -547,6 +629,16 @@ class DeltaClient:
     def _disconnect_locked(self) -> None:
         if self._sock is not None:
             try:
+                # shutdown() before close(): the ack reader blocked in
+                # recv on this fd pins the file description, so a bare
+                # close() would defer the FIN until that recv returns —
+                # the server would never learn the connection died (and
+                # a reorder holdback flushed on connection death would
+                # wait forever).
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
                 self._sock.close()
             except OSError:
                 pass
@@ -556,7 +648,7 @@ class DeltaClient:
     def _ensure_connected_locked(self) -> bool:
         if self._sock is not None:
             return True
-        now = time.monotonic()
+        now = self.clock()
         if now < self._next_retry:
             return False
         self._next_retry = now + self.retry_interval
@@ -859,13 +951,17 @@ class RingSender:
     the launcher treat socket and ring paths uniformly).  A full ring
     retries briefly, then sheds the delta (``shed`` counter) — the
     same-machine consumer draining each tick makes sustained fullness an
-    aggregator stall, which telemetry must survive."""
+    aggregator stall, which telemetry must survive.  The retry wait is
+    the only wall-clock dependence on the whole shm path (``ShmRing``
+    itself spins on visibility retries, never on time) — inject
+    ``sleep=`` to run it at simulated time."""
 
     def __init__(self, ring: ShmRing, *, wire_version: int | None = None,
-                 retry: float = 0.01) -> None:
+                 retry: float = 0.01, sleep=time.sleep) -> None:
         self.ring = ring
         self.wire_version = None if wire_version is None else int(wire_version)
         self.retry = float(retry)
+        self.sleep = sleep
         self.shed = 0
 
     def send(self, delta: StepDelta) -> bool:
@@ -882,7 +978,7 @@ class RingSender:
         at-most-once on shed, exactly the ring's contract."""
         if self.ring.push(payload):
             return True
-        time.sleep(self.retry)
+        self.sleep(self.retry)
         if self.ring.push(payload):
             return True
         self.shed += 1

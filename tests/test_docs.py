@@ -103,6 +103,19 @@ class TestArchitectureDoc:
                        "byte-identical to star"):
             assert needle in text, f"architecture.md lost {needle!r}"
 
+    def test_scenario_engine_hop(self):
+        """The scenario-engine hop (ISSUE 9): the architecture doc must
+        keep the layer that exercises everything above it in concert,
+        and its two load-bearing properties."""
+        text = _read(ARCH)
+        for needle in ("scenario engine hop", "repro.anomaly.scenario",
+                       "ScenarioEngine", "SimLink", "SimClock",
+                       "SCENARIO_LIBRARY", "carriage",
+                       "PYTHONHASHSEED-independent",
+                       "rows_sent == rows_ingested + rows_lost_crash",
+                       "byte-for-byte", "scenarios` lane"):
+            assert needle in text, f"architecture.md lost {needle!r}"
+
     def test_dotted_references_resolve(self):
         missing = [d for d in sorted(set(DOTTED.findall(_read(ARCH))))
                    if not _resolves(d)]
@@ -210,6 +223,22 @@ class TestOperationsDoc:
                        "scale/whatif_replay_16384", "exclusive"):
             assert needle in text, f"operations.md lost {needle!r}"
 
+    def test_authoring_a_scenario_section(self):
+        """The scenario cookbook (ISSUE 9): an operator must find the
+        script format, the incident kinds, the determinism rules, and
+        the golden re-pinning workflow."""
+        text = _read(OPS)
+        for needle in ("Authoring a scenario", "Script format",
+                       "Incident", "LinkProfile", "run_scenario",
+                       "rack_degrade", "agg_restart", "clock_skew",
+                       "restart_after", "ordered=False", "reorder_window",
+                       "rows_sent == rows_ingested + rows_lost_crash",
+                       "--repin", "--check", "--trace-dir", "--budget",
+                       "scenario_<name>.golden",
+                       "Re-pinning is deliberate",
+                       "scale/scenario_rack_degrade_1024"):
+            assert needle in text, f"operations.md lost {needle!r}"
+
     def test_readme_links_here_for_rebaseline(self):
         """The re-baseline workflow moved here; the README must keep a
         pointer instead of a divergent copy."""
@@ -276,6 +305,14 @@ class TestHelpMatchesDocs:
         ("repro.anomaly.ClosedLoopSim", ("stage", "policy", "cordoned")),
         ("repro.anomaly.loop", ("ab_compare", "step (stage) time",
                                 "dry_run")),
+        ("repro.anomaly.scenario", ("discrete-event", "byte-identical",
+                                    "golden", "carriage", "scenarios")),
+        ("repro.anomaly.ScenarioEngine", ("determinism", "seeded",
+                                          "PYTHONHASHSEED", "injected")),
+        ("repro.anomaly.scenario.SimLink", ("at-least-once", "resend",
+                                            "socket-vs-sim")),
+        ("repro.anomaly.scenario.LinkProfile", ("ordered", "loss",
+                                                "reorder_window")),
     ])
     def test_docstring_covers(self, obj_path, needles):
         parts = obj_path.split(".")

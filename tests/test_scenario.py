@@ -1,0 +1,262 @@
+"""Deterministic fleet scenario engine suite (repro.anomaly.scenario).
+
+Pins the engine's three contracts:
+
+- **Determinism**: a fixed scenario (seed included) replays with
+  byte-identical event trace and cause stream — in-process here,
+  cross-process via the pinned goldens (the CI ``scenarios`` lane runs
+  ``python -m repro.anomaly.scenario --check`` against the same files).
+- **Conservation**: for every library scenario,
+  ``rows_sent == rows_ingested + rows_lost_crash`` — the carriage may
+  lose, duplicate, stall and reorder, but the only rows missing at the
+  root are the ones that died *with a producer*.
+- **Socket-vs-sim equivalence**: a :class:`SimLink` delivers the same
+  byte stream to the same aggregator as the real socket transport —
+  including when the modelled carriage is faulty (the promise in its
+  docstring).
+
+The hypothesis sweep over randomized scripts lives in
+``test_scenario_property.py`` (slow lane); the deterministic equivalents
+here always run.
+"""
+from __future__ import annotations
+
+import heapq
+import json
+import random
+
+import pytest
+
+from repro.anomaly.scenario import (
+    AggNode,
+    Incident,
+    LinkProfile,
+    SCENARIO_LIBRARY,
+    Scenario,
+    ScenarioEngine,
+    SimLink,
+    build_scenario,
+    run_scenario,
+)
+from repro.core import BigRootsAnalyzer, JAX_FEATURES
+from repro.serve.fleet import DROPOUT_FEATURE, FleetAggregator
+from repro.telemetry.transport import DeltaClient, DeltaServer
+
+from test_transport_faults import cause_sig, host_stream
+
+
+@pytest.fixture(scope="module")
+def library_results():
+    """Run every library scenario once; golden, conservation and
+    counter tests all read from this cache."""
+    return {name: run_scenario(name) for name in SCENARIO_LIBRARY}
+
+
+class TestDeterminism:
+    def test_same_seed_replays_byte_identical(self):
+        """The tentpole contract: two runs of the same script produce
+        the same trace bytes and the same cause bytes."""
+        a = run_scenario("hot_host_cpu")
+        b = run_scenario("hot_host_cpu")
+        assert a.trace_lines == b.trace_lines
+        assert a.cause_lines == b.cause_lines
+        assert a.golden_bytes() == b.golden_bytes()
+        assert a.causes  # the contract is vacuous on an empty stream
+
+    def test_different_seed_diverges(self):
+        """The seed really feeds every stream: nudging it moves the
+        trace (baseline jitter, stagger, link draws all shift)."""
+        a = run_scenario("hot_host_cpu")
+        b = run_scenario("hot_host_cpu", seed=SCENARIO_LIBRARY[
+            "hot_host_cpu"].seed + 1)
+        assert a.trace_digest != b.trace_digest
+
+    def test_script_round_trips_and_replays(self):
+        """Scenario.to_dict/from_dict is lossless: the round-tripped
+        script replays byte-identically, so scripts can live as JSON."""
+        sc = SCENARIO_LIBRARY["cascade_dropouts"]
+        rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
+        assert rt == sc
+        assert run_scenario(rt).golden_bytes() == \
+            run_scenario(sc).golden_bytes()
+
+    def test_host_count_scaling_preserves_per_host_streams(self):
+        """Scaling the fleet 8 -> 64 hosts around an uncorrelated
+        incident leaves the incident host's cause stream byte-identical
+        (per-host rng streams are keyed by host id, not fleet size) and
+        pins no spurious causes on the new hosts."""
+        small = run_scenario("hot_host_cpu", hosts=8, racks=2)
+        big = run_scenario("hot_host_cpu", hosts=64, racks=8)
+
+        def per_host(res, node):
+            return [l for l in res.cause_lines
+                    if json.loads(l)["node"] == node]
+
+        assert per_host(small, "h0003") == per_host(big, "h0003")
+        assert per_host(small, "h0003")  # non-vacuous
+        for res in (small, big):
+            assert {json.loads(l)["node"]
+                    for l in res.cause_lines} == {"h0003"}
+
+
+class TestGoldens:
+    @pytest.mark.parametrize("name", sorted(SCENARIO_LIBRARY))
+    def test_matches_pinned_golden(self, name, library_results):
+        """Byte-for-byte against tests/golden/scenario_<name>.golden —
+        the same files the CI scenarios lane checks.  Re-pin after a
+        deliberate behavior change with
+        ``python -m repro.anomaly.scenario --repin``."""
+        import os
+        path = os.path.join(os.path.dirname(__file__), "golden",
+                            f"scenario_{name}.golden")
+        with open(path, "rb") as f:
+            want = f.read()
+        assert library_results[name].golden_bytes() == want
+
+    def test_golden_header_is_reviewable(self, library_results):
+        got = library_results["rack_degrade"].golden_bytes().decode()
+        head = got.splitlines()[:4]
+        assert head[0] == "# scenario: rack_degrade"
+        assert head[1].startswith("# seed: 23 hosts: 24 steps: 32")
+        assert head[2].startswith("# trace_sha256: ")
+        counters = json.loads(head[3].removeprefix("# counters: "))
+        assert counters["rows_sent"] == counters["rows_ingested"] \
+            + counters["rows_lost_crash"]
+
+
+class TestConservation:
+    @pytest.mark.parametrize("name", sorted(SCENARIO_LIBRARY))
+    def test_rows_conserve(self, name, library_results):
+        """The universal invariant: every row a live producer sent is
+        either ingested at the root or died with a crashed producer —
+        never silently lost to the carriage."""
+        c = library_results[name].counters
+        assert c["rows_sent"] == c["rows_ingested"] + c["rows_lost_crash"]
+        assert c["rows_produced"] >= c["rows_sent"]
+
+    def test_lossy_fabric_really_exercised_the_machinery(self,
+                                                         library_results):
+        """The datagram scenario must hit every absorption path: real
+        loss, duplication, resends, reorder stashes and dedup drops —
+        otherwise the conservation assertion above proves nothing."""
+        c = library_results["lossy_fabric"].counters
+        assert c["link_lost"] > 0
+        assert c["link_duplicated"] > 0
+        assert c["link_resends"] > 0
+        assert c["reorder_holds"] > 0
+        assert c["duplicate_drops"] > 0
+        assert c["rows_lost_crash"] == 0  # nobody crashed: nothing lost
+
+    def test_cascade_crash_accounting(self, library_results):
+        """Crashed hosts page dropouts, the mid-incident one escalates
+        to severity 2, the restarted one rejoins under a fresh boot."""
+        res = library_results["cascade_dropouts"]
+        c = res.counters
+        assert c["host_dropouts"] >= 3
+        assert c["host_rejoins"] >= 1
+        drops = [cause for _, cause in res.causes
+                 if cause.feature == DROPOUT_FEATURE]
+        assert any(d.severity >= 2 and d.node == "h0005" for d in drops)
+
+    def test_herd_reconnect_recovers_from_journal(self, library_results):
+        """The killed leaf rebuilds from its journal and the thundering
+        herd replay conserves every row at the root."""
+        res = library_results["herd_reconnect"]
+        trace = "\n".join(res.trace_lines)
+        assert "agg.kill agg0" in trace
+        assert "agg.restart agg0" in trace
+        assert "link.resend" in trace
+        assert res.counters["forwarded_frames"] > 0
+
+    def test_policy_closes_the_loop(self, library_results):
+        """Default scenarios run a real PolicyEngine: the hot-host
+        script must produce mitigation actions in the counters."""
+        c = library_results["hot_host_cpu"].counters
+        assert c["policy_actions"] > 0
+        assert c["policy_kinds"]
+
+
+class TestScriptSurface:
+    def test_build_scenario_overrides(self):
+        sc = build_scenario("hot_host_cpu", hosts=8, seed=99)
+        assert sc.hosts == 8 and sc.seed == 99
+        assert SCENARIO_LIBRARY["hot_host_cpu"].hosts == 16  # untouched
+
+    def test_unknown_topology_raises(self):
+        with pytest.raises(ValueError):
+            run_scenario("hot_host_cpu", hosts=4, steps=2,
+                         topology="ring")
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(KeyError):
+            build_scenario("no_such_scenario")
+
+    def test_incident_round_trip_defaults(self):
+        inc = Incident("cpu_contend", at=3.0)
+        assert Incident.from_dict(inc.to_dict()) == inc
+        full = Incident("rack_degrade", at=1.0, duration=4.0,
+                        hosts=("h0001",), racks=(2,), params={"loss": 0.5})
+        assert Incident.from_dict(full.to_dict()) == full
+
+
+def pump(engine: ScenarioEngine, node: AggNode) -> None:
+    """Drive the engine's event heap to empty, draining + acking the
+    node's inbox after every event — a minimal _agg_tick."""
+    while engine._heap:
+        t, _, fn = heapq.heappop(engine._heap)
+        engine.clock.t = max(engine.clock.t, t)
+        fn()
+        batch, node.inbox = node.inbox, []
+        for link, epoch, key, payload in batch:
+            node.agg.ingest(payload)
+            link.ack(key, epoch)
+
+
+class TestSocketVsSimEquivalence:
+    """The pin SimLink's docstring promises: the modelled carriage and
+    the real socket transport deliver the same byte stream to the same
+    aggregator — same rows, same causes."""
+
+    def _sim_ingest(self, deltas, profile: LinkProfile) -> FleetAggregator:
+        sc = build_scenario("hot_host_cpu", hosts=1, steps=1)
+        engine = ScenarioEngine(sc)
+        node = AggNode("root")
+        node.agg = FleetAggregator(JAX_FEATURES,
+                                   BigRootsAnalyzer(JAX_FEATURES))
+        link = SimLink(engine, "equiv", profile, random.Random("equiv"),
+                       node)
+        for d in deltas:
+            link.send_bytes(d.to_bytes(), d.boot, d.seq)
+        pump(engine, node)
+        assert link.flush()  # everything acked: carriage converged
+        return node.agg
+
+    def _socket_ingest(self, deltas) -> FleetAggregator:
+        agg = FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES))
+        with DeltaServer(("127.0.0.1", 0)) as server:
+            with DeltaClient(server.address) as client:
+                for d in deltas:
+                    client.send(d)
+                assert client.flush(10.0)
+            server.drain_into(agg)
+        return agg
+
+    def test_clean_link_matches_socket(self):
+        deltas = host_stream("h0", 8)
+        via_socket = self._socket_ingest(deltas)
+        via_sim = self._sim_ingest(deltas, LinkProfile())
+        assert via_sim.rows_ingested == via_socket.rows_ingested
+        assert via_sim.duplicate_drops == via_socket.duplicate_drops == 0
+        want = cause_sig(via_socket.step())
+        assert cause_sig(via_sim.step()) == want and want
+
+    def test_faulty_link_converges_to_socket(self):
+        """Loss, duplication and jitter on the ordered carriage are
+        absorbed exactly like the socket stack absorbs its faults: the
+        aggregator cannot tell the difference."""
+        deltas = host_stream("h0", 8)
+        want = cause_sig(self._socket_ingest(deltas).step())
+        lossy = LinkProfile(loss=0.3, dup=0.2, jitter_s=0.05, rto_s=0.5)
+        agg = self._sim_ingest(deltas, lossy)
+        assert agg.rows_ingested == sum(d.num_rows for d in deltas)
+        assert cause_sig(agg.step()) == want and want

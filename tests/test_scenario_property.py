@@ -1,0 +1,90 @@
+"""Property sweep over randomized scenario scripts (hypothesis): any
+small script the strategy can draw replays byte-identically under the
+same seed, and conserves rows end to end.
+
+Slow lane (CI installs hypothesis; the container may not have it — the
+deterministic always-run equivalents live in test_scenario.py).
+"""
+from __future__ import annotations
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container; "
+    "deterministic scenario coverage lives in test_scenario.py"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+from repro.anomaly.scenario import (  # noqa: E402
+    Incident,
+    LinkProfile,
+    Scenario,
+    run_scenario,
+)
+
+
+@st.composite
+def link_profiles(draw):
+    """Ordered (TCP-like) carriage may lose/duplicate/jitter freely —
+    loss is head-of-line delay, never a gap.  Datagram carriage is drawn
+    loss-free with a reorder window wide enough for its jitter, so row
+    conservation stays provable for every draw."""
+    ordered = draw(st.booleans())
+    loss = draw(st.sampled_from([0.0, 0.05, 0.2])) if ordered else 0.0
+    return LinkProfile(
+        latency_s=draw(st.sampled_from([0.001, 0.005, 0.05])),
+        jitter_s=draw(st.sampled_from([0.0, 0.05, 0.3])),
+        loss=loss,
+        dup=draw(st.sampled_from([0.0, 0.1])),
+        rto_s=draw(st.sampled_from([1.0, 2.0])),
+        ordered=ordered,
+    )
+
+
+@st.composite
+def scenarios(draw):
+    hosts = draw(st.integers(min_value=4, max_value=10))
+    steps = draw(st.integers(min_value=6, max_value=12))
+    link = draw(link_profiles())
+    incidents = []
+    kind = draw(st.sampled_from(
+        ["none", "cpu_contend", "disk_contend", "host_crash", "clock_skew"]
+    ))
+    if kind != "none":
+        victim = f"h{draw(st.integers(0, hosts - 1)):04d}"
+        at = draw(st.sampled_from([2.0, 4.0]))
+        params = {}
+        if kind == "clock_skew":
+            params["skew"] = draw(st.sampled_from([15.0, 45.0]))
+        if kind == "host_crash" and draw(st.booleans()):
+            params["restart_after"] = 3.0
+        incidents.append(Incident(
+            kind, at=at, duration=draw(st.sampled_from([4.0, 6.0])),
+            hosts=(victim,), params=params,
+        ))
+    return Scenario(
+        name="prop", seed=draw(st.integers(0, 2**16)), hosts=hosts,
+        racks=draw(st.integers(1, 3)), steps=steps,
+        lease=draw(st.sampled_from([None, 4.0])),
+        reorder_window=0 if link.ordered else 6,
+        link=link, incidents=tuple(incidents),
+    )
+
+
+@given(scenarios())
+@settings(max_examples=15, deadline=None)
+def test_same_seed_replays_byte_identical(sc):
+    a = run_scenario(sc)
+    b = run_scenario(sc)
+    assert a.trace_lines == b.trace_lines
+    assert a.golden_bytes() == b.golden_bytes()
+
+
+@given(scenarios())
+@settings(max_examples=15, deadline=None)
+def test_rows_conserve(sc):
+    c = run_scenario(sc).counters
+    assert c["rows_sent"] == c["rows_ingested"] + c["rows_lost_crash"]
+    assert c["rows_produced"] >= c["rows_sent"]

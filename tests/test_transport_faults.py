@@ -1,0 +1,356 @@
+"""Transport fault-path suite: loss, duplication, and reordering injected
+between client and server through the ``fault=`` hooks, over real sockets.
+
+The contract under test (``docs/wire_format.md`` + transport docstrings):
+whatever the channel does — receiver-side loss with connection severing,
+sender-side loss, at-least-once duplication, holdback reordering — the
+``(boot, seq)`` dedup + resend machinery converges to the *same* ingested
+rows, and therefore the same cause stream, as a fault-free channel.  Every
+converging test pins that equivalence field-for-field against a clean
+in-process ingest of the identical delta bytes.
+
+Also pins the injectable-timebase satellites: ``DeltaClient`` defaults to
+``time.monotonic`` (wall-clock behavior unchanged), an injected clock
+really drives the ``flush`` deadline, and ``RingSender`` defaults to
+``time.sleep``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BigRootsAnalyzer, JAX_FEATURES
+from repro.serve.fleet import FleetAggregator
+from repro.telemetry.events import StageDelta, StepDelta
+from repro.telemetry.transport import DeltaClient, DeltaServer, RingSender, ShmRing
+
+
+def straggler_delta(host: str, seq: int, *, boot: int = 1, n: int = 16,
+                    hot: int = 0) -> StepDelta:
+    """One step with ``hot`` straggling rows (cpu 0.95, 3x duration) so
+    converging streams produce a non-empty cause stream to compare."""
+    t = float(seq - 1)
+    durs = np.ones(n)
+    durs[:hot] = 3.0
+    cpu = np.full(n, 0.2)
+    cpu[:hot] = 0.95
+    return StepDelta(host, seq, [StageDelta(
+        "s0", [f"{host}/t{seq}-{i}" for i in range(n)], [host] * n,
+        np.full(n, t), np.full(n, t) + durs, np.zeros(n, np.int16),
+        {"cpu": cpu}, {"cpu": np.ones(n, bool)})], boot=boot)
+
+
+def host_stream(host: str, steps: int, *, straggle: bool = True) -> list[StepDelta]:
+    return [
+        straggler_delta(host, s + 1, hot=1 if straggle else 0)
+        for s in range(steps)
+    ]
+
+
+def cause_sig(causes) -> list[tuple]:
+    """Full-field signature: equality here is the byte-identical claim."""
+    return [
+        (c.task_id, c.stage_id, c.node, c.feature, c.kind.name,
+         repr(c.value), c.peer_groups, c.severity, c.guidance)
+        for c in causes
+    ]
+
+
+def fresh_agg(**kw) -> FleetAggregator:
+    return FleetAggregator(JAX_FEATURES, BigRootsAnalyzer(JAX_FEATURES), **kw)
+
+
+def clean_reference(deltas, **kw) -> tuple[list[tuple], int]:
+    """Ingest the same serialized bytes over no channel at all: the
+    ground truth every faulted channel must converge to."""
+    agg = fresh_agg(**kw)
+    for d in deltas:
+        agg.ingest(d.to_bytes())
+    return cause_sig(agg.step()), agg.rows_ingested
+
+
+def run_channel(deltas, *, server_fault=None, client_fault=None,
+                agg_kw=None, flushes_between=False) -> FleetAggregator:
+    """Push ``deltas`` through a real socket pair with the given fault
+    hooks, flush to convergence, drain, and diagnose once."""
+    agg = fresh_agg(**(agg_kw or {}))
+    with DeltaServer(("127.0.0.1", 0), fault=server_fault) as server:
+        with DeltaClient(server.address, retry_interval=0.02,
+                         fault=client_fault) as client:
+            for d in deltas:
+                client.send(d)
+                if flushes_between:
+                    assert client.flush(10.0)
+            assert client.flush(10.0)
+            assert client.unacked == 0
+        # Drain after the holdback flush-on-close has run its course.
+        server.drain_into(agg)
+    agg.causes = agg.step()
+    return agg
+
+
+class DropOnce:
+    """Server-side verdict hook: fault each listed ``(boot, seq)`` exactly
+    once — replayed frames re-enter the hook, so one-shot state is what
+    makes an injected loss convergent."""
+
+    def __init__(self, verdict: str, keys):
+        self.verdict = verdict
+        self.pending = set(keys)
+
+    def __call__(self, boot, seq, payload):
+        if (boot, seq) in self.pending:
+            self.pending.discard((boot, seq))
+            return self.verdict
+        return "pass"
+
+
+class TestServerFaults:
+    def test_loss_severs_then_resend_converges(self):
+        """Receiver-side loss mid-stream: the dropped frame is replayed on
+        reconnect and the cause stream is field-identical to a clean
+        channel."""
+        deltas = host_stream("h0", 8)
+        want, want_rows = clean_reference(deltas)
+        hook = DropOnce("drop", {(1, 3), (1, 6)})
+        agg = run_channel(deltas, server_fault=hook)
+        assert agg.rows_ingested == want_rows
+        assert cause_sig(agg.causes) == want and want  # non-empty
+        assert not hook.pending
+
+    def test_duplication_absorbed_by_watermark(self):
+        """Every frame duplicated in the server queue: the (boot, seq)
+        watermark drops each copy whole — row stream and causes exact."""
+        deltas = host_stream("h0", 6)
+        want, want_rows = clean_reference(deltas)
+        agg = run_channel(deltas, server_fault=lambda b, s, p: "dup")
+        assert agg.rows_ingested == want_rows
+        assert agg.duplicate_drops == len(deltas)
+        assert cause_sig(agg.causes) == want and want
+
+    def test_reorder_with_window_resequences(self):
+        """A held-back frame arrives late; reorder_window > 0 stashes the
+        gap and drains in seq order — byte-identical causes, no loss."""
+        deltas = host_stream("h0", 6)
+        want, want_rows = clean_reference(deltas, reorder_window=4)
+        hook = DropOnce("reorder", {(1, 2), (1, 4)})
+        agg = run_channel(deltas, server_fault=hook,
+                          agg_kw={"reorder_window": 4})
+        assert agg.rows_ingested == want_rows
+        assert agg.reorder_holds >= 1
+        assert agg.duplicate_drops == 0
+        assert cause_sig(agg.causes) == want and want
+
+    def test_reorder_without_window_drops_by_contract(self):
+        """Same channel, reorder_window=0: the late frame lands behind an
+        advanced watermark and is dropped whole — the documented trade."""
+        deltas = host_stream("h0", 6)
+        _, clean_rows = clean_reference(deltas)
+        per_frame = deltas[0].num_rows
+        agg = run_channel(deltas, server_fault=DropOnce("reorder", {(1, 2)}))
+        assert agg.duplicate_drops == 1
+        assert agg.rows_ingested == clean_rows - per_frame
+        assert agg.reorder_holds == 0
+
+    def test_faults_injected_counted(self):
+        deltas = host_stream("h0", 4, straggle=False)
+        with DeltaServer(("127.0.0.1", 0),
+                         fault=lambda b, s, p: "dup") as server:
+            with DeltaClient(server.address) as client:
+                for d in deltas:
+                    client.send(d)
+                assert client.flush(10.0)
+            assert server.faults_injected == len(deltas)
+
+    def test_holdback_flushed_on_connection_death(self):
+        """A frame still held for reordering when its connection dies is
+        enqueued anyway: holdback reorders, it must never lose."""
+        deltas = host_stream("h0", 3)
+        want, want_rows = clean_reference(deltas, reorder_window=4)
+        agg = fresh_agg(reorder_window=4)
+        # Hold the *last* frame: no successor ever releases it, only the
+        # connection-death flush can.
+        with DeltaServer(("127.0.0.1", 0),
+                         fault=DropOnce("reorder", {(1, 3)})) as server:
+            client = DeltaClient(server.address, retry_interval=0.02)
+            for d in deltas:
+                client.send(d)
+            # The held frame is never acked while the connection lives:
+            # flush times out with exactly it outstanding.
+            assert client.flush(1.0) is False
+            assert client.unacked == 1
+            client.close()  # connection death flushes the holdback
+            deadline = time.monotonic() + 10.0
+            while server.pending < 3 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            server.drain_into(agg)
+        assert agg.rows_ingested == want_rows
+        assert cause_sig(agg.step()) == want
+
+
+class TestClientFaults:
+    def test_sender_loss_replays_on_reconnect(self):
+        """Sender-side loss buffers the frame and severs; the reconnect
+        replay delivers the whole tail in order — causes identical.
+
+        Flushing between sends keeps the connection live at each send, so
+        every scripted key really reaches the (first-transmission-only)
+        sender hook instead of riding an unfaulted reconnect replay.
+        """
+        deltas = host_stream("h0", 8)
+        want, want_rows = clean_reference(deltas)
+        hook = DropOnce("drop", {(1, 2), (1, 5)})
+        agg = run_channel(deltas, client_fault=hook, flushes_between=True)
+        assert agg.rows_ingested == want_rows
+        assert cause_sig(agg.causes) == want and want
+        assert not hook.pending
+
+    def test_sender_dup_absorbed(self):
+        deltas = host_stream("h0", 5)
+        want, want_rows = clean_reference(deltas)
+        agg = run_channel(deltas, client_fault=lambda b, s, p: "dup",
+                          flushes_between=True)
+        assert agg.rows_ingested == want_rows
+        # The very first frame goes out with the fresh-connect replay,
+        # which is never faulted — every later frame is duplicated.
+        assert agg.duplicate_drops == len(deltas) - 1
+        assert cause_sig(agg.causes) == want
+
+    def test_replayed_frames_never_faulted(self):
+        """The sender hook sees only first transmissions: a hook that
+        drops *every* frame it is shown still converges, because the
+        reconnect replay path bypasses it."""
+        deltas = host_stream("h0", 6)
+        want, want_rows = clean_reference(deltas)
+        faulted = []
+
+        def drop_all_first(boot, seq, payload):
+            faulted.append((boot, seq))
+            return "drop"
+
+        agg = run_channel(deltas, client_fault=drop_all_first)
+        assert agg.rows_ingested == want_rows
+        assert cause_sig(agg.causes) == want
+        # Each key faulted at most once — replays never re-entered.
+        assert len(faulted) == len(set(faulted))
+
+    def test_client_faults_injected_and_reconnects(self):
+        deltas = host_stream("h0", 4, straggle=False)
+        with DeltaServer(("127.0.0.1", 0)) as server:
+            with DeltaClient(server.address, retry_interval=0.02,
+                             fault=DropOnce("drop", {(1, 2)})) as client:
+                for d in deltas:
+                    client.send(d)
+                assert client.flush(10.0)
+                assert client.faults_injected == 1
+                assert client.reconnects >= 1
+            agg = fresh_agg()
+            server.drain_into(agg)
+            assert agg.rows_ingested == sum(d.num_rows for d in deltas)
+
+
+class TestCombinedFaults:
+    def test_multi_host_gauntlet_conserves_and_matches(self):
+        """Three hosts through one server whose hook faults a scripted
+        mix of loss, duplication, and reordering: every host's row stream
+        converges and the diagnosis matches the clean reference.
+
+        Cross-host interleaving at the server is scheduling-dependent, so
+        the equality here is on the *sorted* cause signatures; per-host
+        order is pinned by the single-host tests above.
+        """
+        streams = {h: host_stream(h, 6, straggle=(h == "h1"))
+                   for h in ("h0", "h1", "h2")}
+        clean = fresh_agg(reorder_window=4)
+        for step in range(6):
+            for h in ("h0", "h1", "h2"):
+                clean.ingest(streams[h][step].to_bytes())
+        want = sorted(cause_sig(clean.step()))
+
+        script = {("h0", 2): "drop", ("h1", 3): "dup", ("h2", 4): "reorder",
+                  ("h1", 5): "drop"}
+        fired = set()
+
+        def hook(boot, seq, payload):
+            host = StepDelta.from_bytes(payload).host
+            key = (host, seq)
+            if key in script and key not in fired:
+                fired.add(key)
+                return script[key]
+            return "pass"
+
+        agg = fresh_agg(reorder_window=4)
+        with DeltaServer(("127.0.0.1", 0), fault=hook) as server:
+            clients = {h: DeltaClient(server.address, retry_interval=0.02)
+                       for h in streams}
+            for step in range(6):
+                for h, client in clients.items():
+                    client.send(streams[h][step])
+            for client in clients.values():
+                assert client.flush(10.0)
+                client.close()
+            server.drain_into(agg)
+        causes = agg.step()
+        assert fired == set(script)
+        assert agg.rows_ingested == clean.rows_ingested
+        assert agg.num_hosts == 3
+        assert sorted(cause_sig(causes)) == want and want
+
+
+class CountingClock:
+    def __init__(self, t=0.0, tick=0.0):
+        self.t, self.tick, self.calls = t, tick, 0
+
+    def __call__(self):
+        self.calls += 1
+        self.t += self.tick
+        return self.t
+
+
+class TestInjectableTimebases:
+    def test_delta_client_clock_defaults_to_monotonic(self):
+        """Satellite pin: default construction is byte-for-byte the old
+        wall-clock behavior — the injectable timebase changes nothing
+        unless injected."""
+        client = DeltaClient(("127.0.0.1", 1), connect_timeout=0.05)
+        try:
+            assert client.clock is time.monotonic
+        finally:
+            client.close()
+
+    def test_ring_sender_sleep_defaults_to_time_sleep(self):
+        with ShmRing.create(capacity=1 << 12) as ring:
+            sender = RingSender(ShmRing.attach(ring.name))
+            assert sender.sleep is time.sleep
+            sender.close()
+
+    def test_injected_clock_drives_flush_deadline(self):
+        """A simulated clock expires the flush deadline without wall
+        waiting: flush() against an unreachable server returns False as
+        soon as the *injected* time passes the deadline."""
+        clock = CountingClock(t=0.0, tick=10.0)
+        client = DeltaClient(("127.0.0.1", 1), connect_timeout=0.05,
+                             retry_interval=0.01, clock=clock)
+        try:
+            client.send(straggler_delta("h0", 1))
+            start = time.monotonic()
+            assert client.flush(timeout=25.0) is False
+            assert time.monotonic() - start < 5.0
+            assert clock.calls >= 2
+        finally:
+            client.close()
+
+    def test_injected_sleep_drives_ring_retry(self):
+        """RingSender's full-ring retry waits on the injected sleep, not
+        the wall: a shed against a full ring calls it exactly once."""
+        waits = []
+        with ShmRing.create(capacity=512) as ring:
+            sender = RingSender(ShmRing.attach(ring.name), retry=0.25,
+                                sleep=waits.append)
+            assert ring.push(b"x" * 400)  # leaves too little room
+            big = straggler_delta("h0", 1)
+            assert sender.send(big) is False
+            assert sender.shed == 1
+            assert waits == [0.25]
+            sender.close()
