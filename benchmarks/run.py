@@ -46,6 +46,7 @@ BENCHES = {
     "wire_transport": scale_bench.wire_transport,
     "policy_eval": scale_bench.policy_eval,
     "whatif_replay": scale_bench.whatif_replay,
+    "forecast": scale_bench.forecast,
     "scenario_fleet": scale_bench.scenario_fleet,
     "kernels": scale_bench.kernel_bench,
     "e2e_train": scale_bench.e2e_train_bench,
@@ -116,7 +117,8 @@ def main() -> None:
     elif check:
         wanted = ["analyzer_scale", "streaming_scale", "fleet_gates",
                   "fleet_merge", "tree_merge", "wire_transport",
-                  "policy_eval", "whatif_replay", "scenario_fleet"]
+                  "policy_eval", "whatif_replay", "forecast",
+                  "scenario_fleet"]
     else:
         wanted = list(BENCHES)
 

@@ -933,6 +933,97 @@ def whatif_replay(n_hosts: int = 16384, reps: int = 5):
     return rows, csv
 
 
+def forecast(n_hosts: int = 16384, reps: int = 7):
+    """Predictive straggler forecasting in the per-step diagnosis tick.
+
+    Three rows:
+
+    - ``scale/forecast_infer_16384`` (CI-gated, **< 5 ms**): µs for one
+      batched *recurrent* forecast launch over ``n_hosts`` newest
+      telemetry rows — the form :class:`repro.core.forecast.Forecaster`
+      actually runs per tick (carried ``[S, H, N]`` state, one
+      ``forecast_step`` over ``[S, F]``).  This sits in the same tick as
+      the gate sweep (~18 ms) and the what-if replay (< 5 ms), so it
+      gets the same 5 ms ceiling.
+    - ``scale/forecast_window_16384`` (ungated, context): the parallel
+      windowed re-score of full ``[S, L, F]`` sequences — the
+      training/evaluation form.  Recorded to document *why* the serve
+      path is recurrent: at 16k hosts the windowed launch costs ~L× the
+      step launch and blows the tick budget.
+    - ``scale/forecast_value_e2e`` (ungated): wall µs to train on mixed
+      seeded incident episodes and evaluate held-out runs; the derived
+      column carries the honest value gate — model AUC vs the best
+      per-feature threshold baseline (:func:`repro.core.roc.score_auc`)
+      and the median lead time in steps at alarm precision ≥ 0.8.
+    """
+    from repro.anomaly.scenario import export_episodes
+    from repro.core.fleet import ForecastBatch
+    from repro.core.forecast import (
+        Forecaster, evaluate_forecaster, lead_time_curve, train_forecaster,
+    )
+    from repro.models.forecast_ssd import ForecastConfig, forecast_init
+
+    cfg = ForecastConfig(features=len(JAX_FEATURES))
+    fc = Forecaster(forecast_init(cfg, seed=0), cfg, JAX_FEATURES)
+    rng = np.random.default_rng(0)
+    rows_x = rng.lognormal(0.0, 0.3, (n_hosts, len(JAX_FEATURES)))
+    h = np.zeros((n_hosts, cfg.hidden, cfg.state))
+    update = np.ones(n_hosts)
+
+    fc.step_scores(rows_x, h, update)  # warm (jit compile)
+    best = float("inf")
+    for _ in range(reps):
+        with Timer() as t:
+            fc.step_scores(rows_x, h, update)
+        best = min(best, t.seconds)
+    infer_us = best * 1e6
+    backend = "jax" if fc._step_jit not in (None, False) else "numpy"
+    rows = [(f"forecast_infer_{n_hosts}", infer_us)]
+    csv = [(f"scale/forecast_infer_{n_hosts}", infer_us,
+            f"sub_5ms={infer_us < 5000.0};hosts={n_hosts};backend={backend}")]
+
+    # windowed form (context row): same hosts, full L-step sequences
+    xw = rng.lognormal(0.0, 0.3, (n_hosts, cfg.length, len(JAX_FEATURES)))
+    batch = ForecastBatch(
+        x=xw, mask=np.ones((n_hosts, cfg.length)),
+        nodes=[f"h{i}" for i in range(n_hosts)],
+        stage_ids=["s0"] * n_hosts, task_ids=["t"] * n_hosts,
+        count=n_hosts,
+    )
+    fc.scores(batch)  # warm
+    best = float("inf")
+    for _ in range(reps):
+        with Timer() as t:
+            fc.scores(batch)
+        best = min(best, t.seconds)
+    window_us = best * 1e6
+    rows.append((f"forecast_window_{n_hosts}", window_us))
+    csv.append((f"scale/forecast_window_{n_hosts}", window_us,
+                f"step_speedup={window_us / max(infer_us, 1e-9):.1f}x;"
+                f"length={cfg.length}"))
+
+    # value gate: mixed-incident train/held-out eval (seeded, CPU)
+    with Timer() as t:
+        train = [export_episodes("hot_host_cpu", seed=11),
+                 export_episodes("hot_host_cpu", seed=211),
+                 export_episodes("clock_skew", seed=53),
+                 export_episodes("clock_skew", seed=253)]
+        held = [export_episodes("hot_host_cpu", seed=411),
+                export_episodes("clock_skew", seed=453)]
+        params = train_forecaster(train, seed=0, steps=400, lr=0.05)
+        rep = evaluate_forecaster(params, held)
+        lead = lead_time_curve(params, held, thresholds=(0.5,))[0]
+    value_us = t.seconds * 1e6
+    derived = (f"auc={rep['auc']:.4f};baseline_auc={rep['baseline_auc']:.4f};"
+               f"auc_gain={rep['auc_gain']:.4f};"
+               f"median_lead_steps={lead['median_lead_steps']:.1f};"
+               f"precision={lead['precision']:.2f};"
+               f"sequences={rep['sequences']}")
+    rows.append(("forecast_value_e2e", value_us))
+    csv.append(("scale/forecast_value_e2e", value_us, derived))
+    return rows, csv
+
+
 def scenario_fleet(n_hosts: int = 1024):
     """Deterministic fleet scenario engine at bench scale: one full
     ``rack_degrade`` run over ``n_hosts`` simulated hosts (64 racks,

@@ -8,6 +8,7 @@ from .generators import CpuAnomalyGenerator, IoAnomalyGenerator, NetworkAnomalyG
 from .injector import Injection, InjectionSchedule, overlap
 from .loop import ABResult, ClosedLoopSim, LoopResult, SCENARIOS, SimActuator, ab_compare
 from .scenario import (
+    EpisodeSet,
     Incident,
     LinkProfile,
     SCENARIO_LIBRARY,
@@ -15,6 +16,7 @@ from .scenario import (
     ScenarioEngine,
     ScenarioResult,
     build_scenario,
+    export_episodes,
     run_scenario,
 )
 from .sim import SimCluster, SimResult, WorkloadProfile, WORKLOAD_PROFILES
@@ -23,6 +25,7 @@ __all__ = [
     "ABResult",
     "ClosedLoopSim",
     "CpuAnomalyGenerator",
+    "EpisodeSet",
     "Incident",
     "Injection",
     "InjectionSchedule",
@@ -42,6 +45,7 @@ __all__ = [
     "WorkloadProfile",
     "ab_compare",
     "build_scenario",
+    "export_episodes",
     "overlap",
     "run_scenario",
 ]

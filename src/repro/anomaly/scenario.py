@@ -75,18 +75,22 @@ import heapq
 import json
 import os
 import random
+import re
 import sys
 import tempfile
 import time
 from dataclasses import dataclass, field, replace
 
+import numpy as np
+
 from ..core.analyzer import BigRootsAnalyzer, RootCause
-from ..core.features import JAX_FEATURES
+from ..core.features import JAX_FEATURES, FeatureKind
 from ..ft.policy import GuardrailConfig, PolicyEngine, RecordingActuator
 from ..serve.fleet import FleetAggregator, TreeAggregator
 from ..telemetry.events import StepTelemetry, WireFormatError
 
 __all__ = [
+    "EpisodeSet",
     "Incident",
     "LinkProfile",
     "Scenario",
@@ -94,6 +98,7 @@ __all__ = [
     "ScenarioResult",
     "SCENARIO_LIBRARY",
     "build_scenario",
+    "export_episodes",
     "run_scenario",
 ]
 
@@ -1017,10 +1022,170 @@ SCENARIO_LIBRARY: dict[str, Scenario] = {
 }
 
 
+# -- labeled episodes (training data for repro.core.forecast) -----------------
+#
+# A scenario run is a *labeled* incident: the engine knows which rows the
+# Eq. 5 gates later confirmed as stragglers (the root's cause stream).
+# The exporter turns one run into supervised sequences — per host, every
+# trailing window of `length` gate-space rows, stamped with whether that
+# host gets a gate-confirmed straggler within the next `horizon` steps.
+# Same determinism contract as the cause goldens: a fixed scenario yields
+# byte-identical tensors + labels, pinned in tests/golden/ via --episodes.
+
+_TASK_STEP_RE = re.compile(r"^(.+)/step(\d+)$")
+
+
+@dataclass
+class EpisodeSet:
+    """One scenario run as supervised forecasting sequences.
+
+    ``x[s]`` holds host ``hosts[s]``'s gate-space rows for the ``length``
+    steps ending at ``anchors[s]`` (newest last — the same per-node
+    trailing-window view :func:`repro.core.fleet.pack_sequences` packs at
+    inference time); ``y[s]`` is 1 iff the Eq. 5 gates confirmed that
+    host as a straggler within ``(anchor, anchor + horizon]``.
+    """
+
+    name: str
+    seed: int
+    length: int
+    horizon: int
+    x: np.ndarray                       # [S, L, F] float64, full windows only
+    y: np.ndarray                       # [S] int8 labels
+    hosts: list[str]                    # [S] host per sequence
+    anchors: list[int]                  # [S] anchor (newest) step per sequence
+    stage_ids: list[str]                # [S] stage of the anchor row
+    confirmed: tuple                    # sorted (host, step) gate verdicts
+    rows: int                           # trace rows consumed (all hosts)
+    row_steps: set                      # every (host, step) trace row seen
+    counters: dict                      # the run's ScenarioResult counters
+    wall_seconds: float
+
+    @property
+    def positives(self) -> int:
+        return int(self.y.sum())
+
+    def golden_bytes(self) -> bytes:
+        """Byte-exact golden body: tensor digests + every positive label."""
+        head = [
+            f"# episodes: {self.name}",
+            f"# seed: {self.seed} length: {self.length} "
+            f"horizon: {self.horizon}",
+            f"# rows: {self.rows} sequences: {len(self.y)} "
+            f"positives: {self.positives} confirmed: {len(self.confirmed)}",
+            f"# x_sha256: {hashlib.sha256(self.x.tobytes()).hexdigest()} "
+            f"shape: {'x'.join(map(str, self.x.shape))}",
+            f"# y_sha256: {hashlib.sha256(self.y.tobytes()).hexdigest()}",
+        ]
+        lines = sorted(
+            json.dumps(
+                {"host": h, "anchor": a, "stage": st},
+                sort_keys=True, separators=(",", ":"),
+            )
+            for h, a, st, yy in zip(
+                self.hosts, self.anchors, self.stage_ids, self.y
+            )
+            if yy
+        )
+        return ("\n".join(head + lines) + "\n").encode()
+
+
+def export_episodes(
+    name_or_scenario,
+    length: int = 8,
+    horizon: int = 3,
+    workdir: str | None = None,
+    **overrides,
+) -> EpisodeSet:
+    """Run a scenario and export its labeled forecasting episodes.
+
+    Rows come straight from each simulated host's in-memory ``TraceStore``
+    (every completed step lands there regardless of transport fate), put
+    into gate space exactly as :class:`~repro.core.window.SlidingStageWindow`
+    would (TIME columns / max(duration, 1e-12), row-local); labels come
+    from the root's confirmed cause stream — only causes whose feature is
+    a schema column (i.e. Eq. 5 gate output, never synthesized causes
+    like ``host_dropout``).  A window anchored at step ``a`` is labeled
+    ``y=1`` iff its node is gate-confirmed at some step ``s`` with
+    ``a < s <= a + horizon`` — the *future* verdict, which is what makes
+    the episodes forecasting data rather than detection data.  Only full
+    ``length``-step windows are emitted, so every ``x`` row maps 1:1
+    onto a trace row.
+
+    Exports are byte-reproducible for a fixed scenario and seed
+    (``EpisodeSet.golden_bytes`` is golden-pinned in CI, same ``--check``
+    / ``--repin`` workflow as the cause-stream goldens).
+    """
+    t0 = time.perf_counter()
+    sc = build_scenario(name_or_scenario, **overrides)
+    eng = ScenarioEngine(sc, workdir=workdir)
+    result = eng.run()
+    schema = JAX_FEATURES
+    tcols = schema.cols_of_kind(FeatureKind.TIME)
+
+    confirmed: set[tuple[str, int]] = set()
+    for _t, c in result.causes:
+        if c.feature not in schema:
+            continue
+        m = _TASK_STEP_RE.match(c.task_id)
+        if m:
+            confirmed.add((m.group(1), int(m.group(2))))
+
+    xs, ys, hosts, anchors, stage_ids = [], [], [], [], []
+    rows_total = 0
+    row_steps: set[tuple[str, int]] = set()
+    for host in eng.hosts:
+        rows: list[tuple[int, str, np.ndarray]] = []
+        for frame in host.telem.trace.stages():
+            v = frame.raw.copy()
+            if tcols.size:
+                v[:, tcols] /= np.maximum(frame.durations, 1e-12)[:, None]
+            for i, tid in enumerate(frame.task_ids):
+                step = int(_TASK_STEP_RE.match(tid).group(2))
+                rows.append((step, frame.stage_id, v[i]))
+                row_steps.add((host.id, step))
+        rows.sort(key=lambda r: r[0])
+        rows_total += len(rows)
+        for k in range(length - 1, len(rows)):
+            anchor, stage_id, _ = rows[k]
+            xs.append(np.stack([r[2] for r in rows[k - length + 1 : k + 1]]))
+            ys.append(
+                1 if any(
+                    (host.id, s) in confirmed
+                    for s in range(anchor + 1, anchor + horizon + 1)
+                ) else 0
+            )
+            hosts.append(host.id)
+            anchors.append(anchor)
+            stage_ids.append(stage_id)
+
+    F = len(schema)
+    x = (np.stack(xs) if xs
+         else np.zeros((0, length, F), dtype=np.float64))
+    return EpisodeSet(
+        name=sc.name, seed=sc.seed, length=length, horizon=horizon,
+        x=x, y=np.asarray(ys, dtype=np.int8),
+        hosts=hosts, anchors=anchors, stage_ids=stage_ids,
+        confirmed=tuple(sorted(confirmed)),
+        rows=rows_total, row_steps=row_steps,
+        counters=result.counters,
+        wall_seconds=time.perf_counter() - t0,
+    )
+
+
+# Scenarios whose episode exports are golden-pinned in tests/golden/
+# (the --episodes lane default: one classic straggler, one with crashes).
+EPISODE_PINS = ("hot_host_cpu", "cascade_dropouts")
+
+
 # -- CI runner ----------------------------------------------------------------
 
 def _golden_path(golden_dir: str, name: str) -> str:
     return os.path.join(golden_dir, f"scenario_{name}.golden")
+
+
+def _episode_golden_path(golden_dir: str, name: str) -> str:
+    return os.path.join(golden_dir, f"episodes_{name}.golden")
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -1043,6 +1208,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="compare against pinned goldens byte-for-byte")
     ap.add_argument("--repin", action="store_true",
                     help="rewrite the pinned goldens from this run")
+    ap.add_argument("--episodes", action="store_true",
+                    help="run the labeled-episode exporter instead of the "
+                         "cause-stream lane (goldens: episodes_<name>.golden; "
+                         "default names: the EPISODE_PINS subset)")
     ap.add_argument("--golden-dir", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.dirname(
             os.path.dirname(os.path.abspath(__file__))))), "tests", "golden"),
@@ -1059,6 +1228,42 @@ def main(argv: list[str] | None = None) -> int:
             print(f"{name}: hosts={sc.hosts} steps={sc.steps} "
                   f"topology={sc.topology} incidents={len(sc.incidents)}")
         return 0
+
+    if args.episodes:
+        names = args.names or list(EPISODE_PINS)
+        failures = 0
+        for name in names:
+            es = export_episodes(name)
+            got = es.golden_bytes()
+            status = "ran"
+            if es.wall_seconds > args.budget:
+                status = f"OVER-BUDGET ({es.wall_seconds:.1f}s "\
+                         f"> {args.budget:.0f}s)"
+                failures += 1
+            if args.repin:
+                os.makedirs(args.golden_dir, exist_ok=True)
+                with open(_episode_golden_path(args.golden_dir, name),
+                          "wb") as f:
+                    f.write(got)
+                status = "repinned"
+            elif args.check:
+                try:
+                    with open(_episode_golden_path(args.golden_dir, name),
+                              "rb") as f:
+                        want = f.read()
+                except FileNotFoundError:
+                    want = None
+                if want is None:
+                    status = "MISSING-GOLDEN"
+                    failures += 1
+                elif got != want:
+                    status = "MISMATCH"
+                    failures += 1
+                else:
+                    status = "OK"
+            print(f"EPISODES,{name},{status},sequences={len(es.y)},"
+                  f"positives={es.positives},wall={es.wall_seconds:.2f}s")
+        return 1 if failures else 0
 
     names = args.names or list(SCENARIO_LIBRARY)
     trace_dir = args.trace_dir or os.path.join(

@@ -12,7 +12,8 @@ Public API:
         Attribution, WhatIfReplayer,
         PCCAnalyzer, PCCThresholds,
         straggler_mask, straggler_scale,
-        evaluate, roc_sweep, auc, ConfusionCounts,
+        evaluate, roc_sweep, auc, ConfusionCounts, score_auc, score_points,
+        Forecaster, train_forecaster, evaluate_forecaster, lead_time_curve,
         summarize, render_markdown,
     )
 """
@@ -41,12 +42,34 @@ from .features import (
     FeatureSpec,
     get_schema,
 )
-from .fleet import FleetGateBatch, eval_gates_np, pack_windows
+from .fleet import (
+    FleetGateBatch,
+    ForecastBatch,
+    eval_gates_np,
+    pack_sequences,
+    pack_windows,
+)
+from .forecast import (
+    PREDICTED_STRAGGLER,
+    Forecaster,
+    baseline_auc,
+    evaluate_forecaster,
+    lead_time_curve,
+    train_forecaster,
+)
 from .frame import StageFrame, TraceStore
 from .pcc import PCCAnalyzer, PCCThresholds
 from .records import StageRecord, TaskRecord, Trace
 from .report import TraceSummary, per_stage_table, render_markdown, summarize
-from .roc import ConfusionCounts, RocPoint, auc, evaluate, roc_sweep
+from .roc import (
+    ConfusionCounts,
+    RocPoint,
+    auc,
+    evaluate,
+    roc_sweep,
+    score_auc,
+    score_points,
+)
 from .sketch import MIN_SKETCH_SAMPLES, P2ColumnSketch, P2Quantile
 from .straggler import DEFAULT_STRAGGLER_THRESHOLD, straggler_mask, straggler_scale
 from .whatif import WhatIfReplayer
@@ -65,11 +88,14 @@ __all__ = [
     "CauseState",
     "ConfusionCounts",
     "FleetGateBatch",
+    "ForecastBatch",
+    "Forecaster",
     "DEFAULT_STRAGGLER_THRESHOLD",
     "FeatureKind",
     "FeatureSchema",
     "FeatureSpec",
     "JAX_FEATURES",
+    "PREDICTED_STRAGGLER",
     "MIN_SKETCH_SAMPLES",
     "P2ColumnSketch",
     "P2Quantile",
@@ -93,20 +119,27 @@ __all__ = [
     "attribution_from_wire",
     "attribution_to_wire",
     "auc",
+    "baseline_auc",
     "build_causes",
     "cause_from_wire",
     "cause_to_wire",
     "evaluate",
+    "evaluate_forecaster",
     "eval_gates_np",
     "found_set",
     "get_schema",
+    "lead_time_curve",
     "normalize_features",
+    "pack_sequences",
     "pack_windows",
     "synthesize_cause",
     "per_stage_table",
     "render_markdown",
     "roc_sweep",
+    "score_auc",
+    "score_points",
     "straggler_mask",
+    "train_forecaster",
     "straggler_scale",
     "summarize",
 ]

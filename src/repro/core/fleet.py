@@ -152,6 +152,76 @@ def pack_windows(
                           vsum, qa, numok, floor, counts)
 
 
+@dataclass
+class ForecastBatch:
+    """Padded per-node telemetry sequences for one forecast launch.
+
+    The forecasting hop rides the same sweep that packs
+    :class:`FleetGateBatch`: per live window, per node, the last
+    ``length`` gate-space rows become one sequence, *left*-padded (mask
+    0.0) when a node's history is shorter — so the batched launch scores
+    exactly what a per-node call over the unpadded tail would.
+    """
+
+    x: np.ndarray      # [S, L, F] gate-space rows, newest step last
+    mask: np.ndarray   # [S, L] 1.0 real step / 0.0 left padding
+    nodes: list        # [S] node name per sequence
+    stage_ids: list    # [S] owning window's stage_id per sequence
+    task_ids: list     # [S] newest task_id per sequence (the anchor row)
+    count: int         # real (unpadded) sequences; rows >= count are all-pad
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return self.x.shape
+
+
+def pack_sequences(
+    windows: Sequence[SlidingStageWindow],
+    schema: FeatureSchema,
+    length: int,
+    seq_bucket: int = 256,
+) -> ForecastBatch:
+    """Gather per-node trailing sequences from live windows → one batch.
+
+    Within a window, a node's live rows are taken in insertion order
+    (ring order == time order for a sliding window) and the trailing
+    ``length`` of them form its sequence.  The sequence dimension is
+    rounded up to a ``seq_bucket`` multiple for the same reason
+    :func:`pack_windows` buckets rows: one jit cache entry per bucket,
+    stable shapes tick to tick.  Bucket-padding sequences are all-pad
+    (mask 0.0 everywhere) and are dropped by ``count`` before emission.
+    """
+    F = len(schema)
+    seqs: list[tuple[np.ndarray, int, str, str, str]] = []
+    for w in windows:
+        live = w.live_index()
+        if live.size == 0:
+            continue
+        codes = w.node_codes[live]
+        for code in np.unique(codes):
+            rows = live[codes == code]
+            tail = rows[-length:]
+            V = w.v[tail]
+            seqs.append(
+                (V, V.shape[0], w.node_name(int(code)), w.stage_id,
+                 w.task_id(int(tail[-1])))
+            )
+    S = len(seqs)
+    S_pad = S
+    if seq_bucket > 1:
+        S_pad = max(seq_bucket, ((S + seq_bucket - 1) // seq_bucket) * seq_bucket)
+    x = np.zeros((S_pad, length, F), dtype=np.float64)
+    mask = np.zeros((S_pad, length), dtype=np.float64)
+    nodes, stage_ids, task_ids = [], [], []
+    for i, (V, n, node, stage_id, task_id) in enumerate(seqs):
+        x[i, length - n :] = V
+        mask[i, length - n :] = 1.0
+        nodes.append(node)
+        stage_ids.append(stage_id)
+        task_ids.append(task_id)
+    return ForecastBatch(x, mask, nodes, stage_ids, task_ids, S)
+
+
 def eval_gates_np(batch: FleetGateBatch, peer_mean: float) -> np.ndarray:
     """Numpy oracle for the packed gate pipeline → ``gbits [W, R, F]``.
 

@@ -107,3 +107,67 @@ def auc(points: Sequence[RocPoint]) -> float:
     for (x0, y0), (x1, y1) in zip(env, env[1:]):
         area += (x1 - x0) * (y0 + y1) / 2.0
     return area
+
+
+# -- score-based ROC (continuous detectors, e.g. repro.core.forecast) ---------
+#
+# The set-based API above evaluates *discrete* analyzer outputs over a
+# threshold grid. A scored detector emits one real number per example, so
+# its whole ROC falls out of a single ranking — no grid needed.
+
+
+def score_points(
+    scores: Sequence[float], labels: Sequence[int]
+) -> list[RocPoint]:
+    """ROC points for a scored detector: alarm when ``score >= threshold``.
+
+    One point per distinct score value (``params=(threshold,)``), swept
+    from the strictest threshold down. Ties share a threshold and move
+    together, so tied positives/negatives trade off honestly instead of
+    being ordered by index.
+    """
+    if len(scores) != len(labels):
+        raise ValueError("scores and labels must have equal length")
+    pos = sum(1 for y in labels if y)
+    neg = len(labels) - pos
+    points = []
+    for thr in sorted(set(scores), reverse=True):
+        tp = sum(1 for s, y in zip(scores, labels) if s >= thr and y)
+        fp = sum(1 for s, y in zip(scores, labels) if s >= thr and not y)
+        points.append(
+            RocPoint(
+                fpr=fp / neg if neg else 0.0,
+                tpr=tp / pos if pos else 0.0,
+                params=(thr,),
+            )
+        )
+    return points
+
+
+def score_auc(scores: Sequence[float], labels: Sequence[int]) -> float:
+    """AUC of a scored detector = P(score(pos) > score(neg)), ties half.
+
+    Computed as the Mann-Whitney U statistic via average ranks — exactly
+    the trapezoid area under the proper tie-aware ROC curve, without
+    building it. Degenerate inputs (empty, or all labels one class) have
+    no ranking to measure and return 0.5 (chance).
+    """
+    if len(scores) != len(labels):
+        raise ValueError("scores and labels must have equal length")
+    pos = sum(1 for y in labels if y)
+    neg = len(labels) - pos
+    if pos == 0 or neg == 0:
+        return 0.5
+    order = sorted(range(len(scores)), key=lambda i: scores[i])
+    ranks = [0.0] * len(scores)
+    i = 0
+    while i < len(order):
+        j = i
+        while j + 1 < len(order) and scores[order[j + 1]] == scores[order[i]]:
+            j += 1
+        avg = (i + j) / 2.0 + 1.0  # 1-based average rank over the tie run
+        for k in range(i, j + 1):
+            ranks[order[k]] = avg
+        i = j + 1
+    rank_pos = sum(r for r, y in zip(ranks, labels) if y)
+    return (rank_pos - pos * (pos + 1) / 2.0) / (pos * neg)

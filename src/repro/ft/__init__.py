@@ -13,6 +13,7 @@ from .policy import (
     PolicyEngine,
     RecordingActuator,
     Rule,
+    forecast_rule,
     load_policy,
 )
 from .supervisor import RestartBudgetExceeded, Supervisor
@@ -33,6 +34,7 @@ __all__ = [
     "RestartBudgetExceeded",
     "Rule",
     "Supervisor",
+    "forecast_rule",
     "load_policy",
     "plan_mesh_shape",
     "reshard_plan",

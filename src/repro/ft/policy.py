@@ -225,6 +225,28 @@ DEFAULT_RULES: tuple[Rule, ...] = (
 )
 
 
+def forecast_rule(
+    action: ActionKind = ActionKind.SPECULATE_TASK,
+    *,
+    name: str = "speculate_forecast",
+    scope: str = "task",
+    min_recurrence: int = 1,
+    cooldown: int = 16,
+    detail: str = "predicted straggler; act before Eq. 5 confirms",
+) -> Rule:
+    """A rule matching the forecaster's ``predicted_straggler`` causes.
+
+    Forecast causes are candidates, not confirmations, so this is opt-in
+    — it is NOT in :data:`DEFAULT_RULES`.  Add it to a policy when the
+    forecaster's held-out precision (``repro.core.forecast.
+    lead_time_curve``) justifies pre-emptive action; the default pairs
+    it with the cheapest reversible response (task speculation).
+    """
+    return Rule(name, ("predicted_straggler",), action, scope=scope,
+                min_recurrence=min_recurrence, cooldown=cooldown,
+                detail=detail)
+
+
 @dataclass(frozen=True)
 class GuardrailConfig:
     """Tunable limits of the guardrail chain (docs/operations.md has the

@@ -47,7 +47,13 @@ from ..core import (
 from ..data.pipeline import DataConfig, HostDataLoader, Prefetcher
 from ..ft.elastic import reshard_plan
 from ..ft.mitigation import MitigationPlanner
-from ..ft.policy import ActionKind, DEFAULT_RULES, PolicyEngine, load_policy
+from ..ft.policy import (
+    ActionKind,
+    DEFAULT_RULES,
+    PolicyEngine,
+    forecast_rule,
+    load_policy,
+)
 from ..models import Model, smoke_variant
 from ..serve import Diagnosis
 from ..serve.fleet import FleetAggregator, TreeAggregator
@@ -126,6 +132,24 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--policy", default="",
                     help="JSON policy file (ft.policy.load_policy format); "
                          "default: the built-in DEFAULT_RULES")
+    ap.add_argument("--forecast", default="",
+                    help="enable the predictive straggler hop: comma-"
+                         "separated scenario names (repro.anomaly.scenario "
+                         "library) to export labeled episodes from and "
+                         "train the forecaster on at startup, e.g. "
+                         "'hot_host_cpu,clock_skew'; tagged "
+                         "predicted_straggler candidates then ride every "
+                         "diagnosis tick (with --mitigate and no --policy "
+                         "file, the opt-in forecast_rule is armed too)")
+    ap.add_argument("--forecast-risk", type=float, default=0.7,
+                    help="risk score above which a node emits a "
+                         "predicted_straggler candidate cause")
+    ap.add_argument("--forecast-horizon", type=int, default=3,
+                    help="label lookahead in steps for episode export")
+    ap.add_argument("--forecast-length", type=int, default=8,
+                    help="telemetry steps per scored sequence")
+    ap.add_argument("--forecast-train-steps", type=int, default=300,
+                    help="Adam steps for the startup training run")
     ap.add_argument("--audit-log", default="",
                     help="append-only JSONL audit log of every policy "
                          "decision, including suppressed ones")
@@ -323,6 +347,34 @@ def run(args) -> dict:
                       f"{fleet_server.endpoint}")
     live_causes: list[dict] = []
 
+    # Predictive hop (opt-in): train the straggle-risk forecaster on
+    # scenario episodes at startup and wire it into the driving
+    # Diagnosis — one extra batched launch per tick, candidates tagged
+    # `predicted_straggler` (see repro.core.forecast).
+    forecast_spec = getattr(args, "forecast", "")
+    if (forecast_spec and diagnosis is not None
+            and diagnosis.aggregator is not None and diagnosis.drive):
+        from ..anomaly.scenario import export_episodes
+        from ..core.forecast import Forecaster
+
+        episodes = [
+            export_episodes(
+                name.strip(),
+                length=getattr(args, "forecast_length", 8),
+                horizon=getattr(args, "forecast_horizon", 3),
+            )
+            for name in forecast_spec.split(",") if name.strip()
+        ]
+        diagnosis.forecaster = Forecaster.train(
+            episodes, JAX_FEATURES, seed=args.seed,
+            steps=getattr(args, "forecast_train_steps", 300),
+            risk_threshold=getattr(args, "forecast_risk", 0.7),
+        )
+        print(f"[forecast] trained on "
+              f"{sum(len(e.y) for e in episodes)} sequences "
+              f"({sum(e.positives for e in episodes)} positive) from "
+              f"{forecast_spec}")
+
     # Closed-loop mitigation: policy engine ticked by the fleet aggregator
     # every diagnosis step (see ft.policy).  Only meaningful where the
     # causes are — the aggregator role; a --fleet-connect host ships raw
@@ -333,6 +385,8 @@ def run(args) -> dict:
     if (getattr(args, "mitigate", False) or dry_run) and fleet is not None:
         policy_path = getattr(args, "policy", "")
         rules = load_policy(policy_path) if policy_path else DEFAULT_RULES
+        if not policy_path and diagnosis.forecaster is not None:
+            rules = (*rules, forecast_rule())
         actuator = TrainActuator(sampler, fleet=fleet)
         policy = PolicyEngine(
             rules, actuator, dry_run=dry_run,

@@ -1,5 +1,32 @@
-"""Model zoo: configs, layers and assemblies for the 10 assigned archs."""
-from .api import Model
-from .config import LayerSlot, ModelConfig, smoke_variant
+"""Model zoo: configs, layers and assemblies for the 10 assigned archs.
 
-__all__ = ["LayerSlot", "Model", "ModelConfig", "smoke_variant"]
+``Model`` pulls in jax at import time, so it is resolved lazily (PEP 562)
+— the portable forecast cell below must stay importable on jax-free
+inference hosts (it runs on numpy there).
+"""
+from .config import LayerSlot, ModelConfig, smoke_variant
+from .forecast_ssd import (
+    ForecastConfig,
+    forecast_init,
+    forecast_logits,
+    forecast_score,
+)
+
+__all__ = [
+    "ForecastConfig",
+    "LayerSlot",
+    "Model",
+    "ModelConfig",
+    "forecast_init",
+    "forecast_logits",
+    "forecast_score",
+    "smoke_variant",
+]
+
+
+def __getattr__(name):
+    if name == "Model":
+        from .api import Model
+
+        return Model
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,226 @@
+"""Right-sized SSD cell for straggle-risk forecasting (repro.core.forecast).
+
+This is the :mod:`repro.models.ssd` Mamba2 recurrence — selective
+``h ← h·decay(dt) + dt·x·B``, readout ``y = C·h`` (the ``ssd_reference``
+oracle specialized to ``G=1, P=1``) — cut down to telemetry scale: a
+~14-feature input row per step, a handful of hidden heads, a 4-wide
+state.  At that size the chunked dual form buys nothing, so the cell is
+optimized for a different axis entirely: **determinism and launch cost**.
+
+Every operation is an exact-rounding IEEE-754 primitive — add, multiply,
+divide, sqrt, abs, min/max — with the usual transcendentals swapped for
+rational/piecewise surrogates of the same shape:
+
+- input compression ``v/(1+|v|)`` instead of ``log1p`` (byte counters
+  and utilization fractions land on one scale),
+- a hard sigmoid ``clip(0.25z+0.5, 0, 1)`` gating the silu,
+- ``0.5(z+sqrt(z²+ε))`` instead of softplus for the positive step size,
+- rational decay ``1/(1+dt·A²)`` instead of ``exp(-dt·exp(A_log))``
+  (same (0,1] forgetting curve, selectivity preserved),
+- rational sigmoid ``0.5(z/(1+|z|)+1)`` for the final risk score.
+
+Every value is pure elementwise math in a written, fixed op order (the
+projections are explicitly unrolled multiply-add chains — neither numpy
+nor XLA reassociates a written chain), which buys three exact contracts
+*per backend*:
+
+1. batched inference over a padded ``[S, L, F]`` pack is byte-identical
+   to scoring each sequence alone (padding is *left*-sided and
+   ``where``-masked, so carried state bits never move);
+2. in the numpy reference path, :func:`forecast_step` — the serve-side
+   O(1) recurrence — replayed over a window's rows from zero state
+   lands on **byte-identical** scores to the one-shot
+   :func:`forecast_score` of that window (same formulas, same order;
+   only the iteration structure differs);
+3. runs are reproducible bit-for-bit across processes and batch sizes.
+
+Under jit, and across backends, *different graphs* of the same math
+agree to the last ulp or two rather than ``==``: XLA contracts
+``a*b+c`` chains into fused multiply-adds per graph, which rounds once
+where the written chain rounds twice.  So jitted-vs-numpy and jitted
+windowed-vs-step comparisons are ``allclose`` at ~1e-15, while any
+*one* compiled function is exactly batch-size-invariant (contract 1
+holds per compiled form — that is what the fleet serve path relies on).
+
+No libm in the hot path also means XLA fuses the forward into straight
+FMA loops; the per-tick fleet launch is the *recurrent* form (one
+:func:`forecast_step` over ``[S, F]``, not an ``[S, L, F]`` re-score),
+which is what keeps 16k hosts inside the per-step diagnosis budget
+(``scale/forecast_infer_16384``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+#: Smoothing of the soft-relu step size: dt = 0.5(z + sqrt(z² + EPS)),
+#: so dt(0) = 0.5·sqrt(EPS) = 0.01 — the floor of the init's dt range.
+_DT_EPS = 4e-4
+
+
+@dataclass(frozen=True)
+class ForecastConfig:
+    """Shape of the forecast cell (defaults are the right-sized ones the
+    ROADMAP asked for: small enough that one 16k-host batched launch
+    stays inside the per-step diagnosis budget)."""
+
+    features: int          # input feature columns (len(schema))
+    hidden: int = 6        # SSD heads H
+    state: int = 4         # state width N per head
+    length: int = 8        # telemetry steps per scored sequence
+    horizon: int = 3       # label lookahead: straggle within `horizon` steps
+
+
+def forecast_init(cfg: ForecastConfig, seed: int = 0) -> dict:
+    """Seeded float64 parameters (numpy — canonical storage form).
+
+    Init follows :func:`repro.models.ssd.ssm_init` conventions: decay
+    rates spread over ``1..H`` (``A`` stores the sqrt; the cell squares
+    it) and ``dt`` biased so the soft-relu lands in ``[1e-2, 0.5]`` — a
+    spread of forgetting timescales over the sequence."""
+    rng = np.random.default_rng(seed)
+    F, H, N = cfg.features, cfg.hidden, cfg.state
+    s = 1.0 / np.sqrt(F)
+    dt = np.exp(rng.uniform(np.log(1e-2), np.log(0.5), H))
+    return {
+        "win": rng.normal(0.0, s, (F, H)),
+        "bin": np.zeros(H),
+        "wdt": rng.normal(0.0, s, (F, H)),
+        "bdt": dt - (_DT_EPS / 4.0) / dt,       # inverse soft-relu
+        "wb": rng.normal(0.0, s, (F, N)),
+        "bb": np.full(N, 0.5),
+        "wc": rng.normal(0.0, s, (F, N)),
+        "bc": np.full(N, 0.5),
+        "A": np.sqrt(np.arange(1, H + 1, dtype=np.float64)),
+        "D": np.ones(H),
+        "wo": rng.normal(0.0, 1.0 / np.sqrt(H), (H,)),
+        "bo": np.zeros(()),
+    }
+
+
+# -- fixed-order exact-rounding primitives ------------------------------------
+
+def _proj(u, W, b, xp):
+    """``u[..., F] @ W[F, D] + b[D]`` as F fixed-order multiply-adds."""
+    out = b + u[..., 0:1] * W[0]
+    for k in range(1, W.shape[0]):
+        out = out + u[..., k : k + 1] * W[k]
+    return out
+
+
+def _compress(x, xp):
+    """Sign-preserving range compression ``v/(1+|v|)`` → (−1, 1)."""
+    return x / (1.0 + xp.abs(x))
+
+
+def _hard_sigmoid(z, xp):
+    """Piecewise-linear sigmoid surrogate ``clip(0.25z+0.5, 0, 1)``."""
+    return xp.minimum(xp.maximum(0.25 * z + 0.5, 0.0), 1.0)
+
+
+def _rational_sigmoid(z, xp):
+    """Smooth strictly-monotone squash onto (0, 1) — the risk score."""
+    return 0.5 * (z / (1.0 + xp.abs(z)) + 1.0)
+
+
+def _soft_relu(z, xp):
+    """Smooth positive step size ``0.5(z+sqrt(z²+ε))`` (softplus shape,
+    sqrt instead of log/exp; minimum value 0.5·sqrt(ε) = 0.01)."""
+    return 0.5 * (z + xp.sqrt(z * z + _DT_EPS))
+
+
+def forecast_logits(params: dict, x, mask=None, xp=np):
+    """Straggle-risk logits for telemetry sequences.
+
+    ``x [..., L, F]`` — gate-space rows (the window's ``v`` space),
+    newest step last.  ``mask [..., L]`` marks real steps (1.0) vs
+    *left* padding (0.0): masked steps leave the carried state
+    bit-identical (``where``), so a short history scores exactly like
+    its unpadded self.  Returns logits ``[...]`` read out at the final
+    (always-real) step.
+
+    Input-dependent quantities (projections, gates, step sizes, decays)
+    are computed for all ``L`` steps in one vectorized block — only the
+    state update itself is sequential, so XLA fuses the launch into a
+    handful of FMA loops.
+    """
+    p = params
+    L = x.shape[-2]
+    H = p["A"].shape[0]
+    N = p["wb"].shape[1]
+    u = _compress(x, xp)                                   # [..., L, F]
+    pre = _proj(u, p["win"], p["bin"], xp)                 # [..., L, H]
+    xt = pre * _hard_sigmoid(pre, xp)                      # hard silu
+    dt = _soft_relu(_proj(u, p["wdt"], p["bdt"], xp), xp)  # [..., L, H]
+    B = _proj(u, p["wb"], p["bb"], xp)                     # [..., L, N]
+    decay = 1.0 / (1.0 + dt * (p["A"] * p["A"]))           # (0, 1]
+    dx = dt * xt
+    h = xp.zeros(x.shape[:-2] + (H, N), dtype=x.dtype)
+    for t in range(L):
+        h_new = (h * decay[..., t, :, None]
+                 + dx[..., t, :, None] * B[..., t, None, :])
+        if mask is not None:
+            keep = (mask[..., t] > 0.0)[..., None, None]
+            h_new = xp.where(keep, h_new, h)
+        h = h_new
+    Ct = _proj(u[..., L - 1, :], p["wc"], p["bc"], xp)     # [..., N]
+    y = Ct[..., 0:1] * h[..., :, 0]
+    for k in range(1, N):
+        y = y + Ct[..., k : k + 1] * h[..., :, k]
+    out = y + p["D"] * xt[..., L - 1, :]
+    logit = p["bo"] + out[..., 0] * p["wo"][0]
+    for j in range(1, H):
+        logit = logit + out[..., j] * p["wo"][j]
+    return logit
+
+
+def forecast_score(params: dict, x, mask=None, xp=np):
+    """Per-sequence straggle risk in (0, 1) — the rational sigmoid of
+    the logits (monotone, so thresholding is order-identical)."""
+    return _rational_sigmoid(forecast_logits(params, x, mask=mask, xp=xp), xp)
+
+
+def forecast_step(params: dict, x, h, update=None, xp=np):
+    """One recurrence step — the serve-side O(1) form of the cell.
+
+    ``x [..., F]`` is the newest gate-space telemetry row per sequence,
+    ``h [..., H, N]`` the carried state (zeros at node birth).  Returns
+    ``(h_new, score)``: the advanced state and the straggle risk read
+    out *at this step*.  ``update [...]`` (1.0 = advance) freezes both
+    the state and, because the readout depends only on ``(u, h)``, the
+    score of held rows — a node whose telemetry did not move between
+    diagnosis ticks re-emits its previous score bit-for-bit.
+
+    Exactness contract: in the numpy path, replaying a window's rows
+    through this function from ``h = 0`` yields byte-identical scores
+    to the one-shot :func:`forecast_score` of the packed window (same
+    formulas in the same written order — only the loop structure
+    differs; jitted forms agree to ~1 ulp, see module docstring).  The
+    per-tick
+    fleet launch uses this form: ``[S, F]`` work instead of
+    ``[S, L, F]``, which is the whole reason 16k hosts fit the
+    ``scale/forecast_infer_16384`` budget.
+    """
+    p = params
+    H = p["A"].shape[0]
+    N = p["wb"].shape[1]
+    u = _compress(x, xp)                                   # [..., F]
+    pre = _proj(u, p["win"], p["bin"], xp)                 # [..., H]
+    xt = pre * _hard_sigmoid(pre, xp)                      # hard silu
+    dt = _soft_relu(_proj(u, p["wdt"], p["bdt"], xp), xp)  # [..., H]
+    B = _proj(u, p["wb"], p["bb"], xp)                     # [..., N]
+    decay = 1.0 / (1.0 + dt * (p["A"] * p["A"]))           # (0, 1]
+    dx = dt * xt
+    h_new = h * decay[..., :, None] + dx[..., :, None] * B[..., None, :]
+    if update is not None:
+        h_new = xp.where((update > 0.0)[..., None, None], h_new, h)
+    Ct = _proj(u, p["wc"], p["bc"], xp)                    # [..., N]
+    y = Ct[..., 0:1] * h_new[..., :, 0]
+    for k in range(1, N):
+        y = y + Ct[..., k : k + 1] * h_new[..., :, k]
+    out = y + p["D"] * xt
+    logit = p["bo"] + out[..., 0] * p["wo"][0]
+    for j in range(1, H):
+        logit = logit + out[..., j] * p["wo"][j]
+    return h_new, _rational_sigmoid(logit, xp)

@@ -57,6 +57,7 @@ class Diagnosis:
         policy=None,
         drive: bool = True,
         attribution: bool = False,
+        forecaster=None,
     ) -> None:
         modes = sum(x is not None for x in (analyzer, aggregator, sink))
         if modes > 1 or (modes == 0 and policy is None):
@@ -76,28 +77,39 @@ class Diagnosis:
         self.policy = policy
         self.drive = bool(drive)
         self.attribution = bool(attribution)
+        # Opt-in predictive hop (repro.core.forecast.Forecaster): scores
+        # the same live windows the gate sweep reads and appends tagged
+        # `predicted_straggler` candidate causes to each tick's return —
+        # the confirmed stream itself is never touched, so forecaster=None
+        # ticks are byte-identical to pre-forecast builds.
+        self.forecaster = forecaster
         self._stream: RootCauseStream | None = None
 
     # -- constructors --------------------------------------------------------
     @classmethod
     def local(cls, analyzer, *, policy=None,
-              attribution: bool = False) -> "Diagnosis":
+              attribution: bool = False, forecaster=None) -> "Diagnosis":
         """Per-host diagnosis: run ``analyzer`` over the telemetry's own
         streaming window each tick (needs
         ``StepTelemetry(streaming=True)``).  ``attribution=True`` prices
         each fresh cause with a what-if recovered-time estimate
         (:class:`~repro.core.whatif.WhatIfReplayer`); off by default the
-        emitted stream is byte-identical to an unattributed one."""
+        emitted stream is byte-identical to an unattributed one.
+        ``forecaster=`` adds the predictive straggler hop (see
+        :class:`~repro.core.forecast.Forecaster`)."""
         return cls(analyzer=analyzer, policy=policy,
-                   attribution=attribution)
+                   attribution=attribution, forecaster=forecaster)
 
     @classmethod
     def fleet(cls, aggregator, *, drive: bool = True,
-              policy=None) -> "Diagnosis":
+              policy=None, forecaster=None) -> "Diagnosis":
         """Fleet diagnosis: drain each tick's delta into ``aggregator``
         in-process (needs ``StepTelemetry(wire=True)``); ``drive``
-        selects whether this party runs the merged sweep."""
-        return cls(aggregator=aggregator, drive=drive, policy=policy)
+        selects whether this party runs the merged sweep.
+        ``forecaster=`` scores the aggregator's live windows each driven
+        tick (driving party only — it owns the merged view)."""
+        return cls(aggregator=aggregator, drive=drive, policy=policy,
+                   forecaster=forecaster)
 
     @classmethod
     def forward(cls, sink, *, policy=None) -> "Diagnosis":
@@ -165,6 +177,22 @@ class Diagnosis:
             self.sink.send(telemetry.drain_delta())
         elif self._stream is not None:
             fresh = self._stream.step()
+        if self.forecaster is not None:
+            # One extra batched launch over the same windows the gate
+            # sweep reads; candidates append after the confirmed causes
+            # (the stream's dedup state never sees them).  The policy
+            # step below receives them too, so rules matching
+            # `predicted_straggler` act with lead time — except when the
+            # policy is the aggregator's own (already ticked inside the
+            # sweep, before forecasts existed this tick).
+            if self.aggregator is not None and self.drive:
+                windows = list(self.aggregator.store.stages())
+            elif self._stream is not None:
+                windows = [telemetry.live_window]
+            else:
+                windows = []
+            if windows:
+                fresh = list(fresh) + self.forecaster.step(windows)
         if (
             self.policy is not None
             and self.policy is not getattr(self.aggregator, "policy", None)

@@ -116,6 +116,20 @@ class TestArchitectureDoc:
                        "byte-for-byte", "scenarios` lane"):
             assert needle in text, f"architecture.md lost {needle!r}"
 
+    def test_forecast_hop(self):
+        """The forecast hop (ISSUE 10): the architecture doc must keep
+        the predictive layer and its load-bearing contracts — recurrent
+        serve, honest value gate, candidates outside the dedup
+        stream."""
+        text = _read(ARCH)
+        for needle in ("forecast hop", "repro.core.forecast",
+                       "export_episodes", "forecast_ssd",
+                       "forecast_step", "predicted_straggler",
+                       "pack_sequences(length=1)", "forecast_rule",
+                       "scale/forecast_infer_16384", "per-feature",
+                       "byte-identical"):
+            assert needle in text, f"architecture.md lost {needle!r}"
+
     def test_dotted_references_resolve(self):
         missing = [d for d in sorted(set(DOTTED.findall(_read(ARCH))))
                    if not _resolves(d)]
@@ -239,6 +253,22 @@ class TestOperationsDoc:
                        "scale/scenario_rack_degrade_1024"):
             assert needle in text, f"operations.md lost {needle!r}"
 
+    def test_forecast_driven_mitigation_section(self):
+        """The forecast ops guide (ISSUE 10): an operator must find how
+        to train on scenario episodes, how to read and bound risk
+        alarms, the honest value gate, and the opt-in policy wiring."""
+        text = _read(OPS)
+        for needle in ("Forecast-driven mitigation", "--forecast",
+                       "--forecast-risk", "predicted_straggler",
+                       "export_episodes", "risk_threshold", "min_history",
+                       "hold_steps", "forecast_rule", "DEFAULT_RULES",
+                       "evaluate_forecaster", "lead_time_curve",
+                       "score_auc", "byte-identical",
+                       "episodes_<name>.golden", "--episodes",
+                       "scale/forecast_infer_16384", "forecast_step",
+                       "pack_sequences"):
+            assert needle in text, f"operations.md lost {needle!r}"
+
     def test_readme_links_here_for_rebaseline(self):
         """The re-baseline workflow moved here; the README must keep a
         pointer instead of a divergent copy."""
@@ -313,6 +343,21 @@ class TestHelpMatchesDocs:
                                             "socket-vs-sim")),
         ("repro.anomaly.scenario.LinkProfile", ("ordered", "loss",
                                                 "reorder_window")),
+        ("repro.core.Forecaster", ("recurrence", "predicted_straggler",
+                                   "risk_threshold", "hold", "frozen",
+                                   "min_history")),
+        ("repro.core.forecast", ("candidates", "byte", "roc",
+                                 "lead_time_curve")),
+        ("repro.core.lead_time_curve", ("precision", "median", "earliest")),
+        ("repro.anomaly.scenario.export_episodes", ("label", "horizon",
+                                                    "byte", "gate space")),
+        ("repro.models.forecast_ssd", ("exact-rounding", "byte-identical",
+                                       "fixed op order", "allclose")),
+        ("repro.models.forecast_ssd.forecast_step", ("recurrence",
+                                                     "h = 0",
+                                                     "freeze")),
+        ("repro.ft.forecast_rule", ("opt-in", "DEFAULT_RULES",
+                                    "predicted_straggler")),
     ])
     def test_docstring_covers(self, obj_path, needles):
         parts = obj_path.split(".")

@@ -1,0 +1,156 @@
+"""Property sweep over the forecast cell (hypothesis): batched scoring
+is byte-identical to per-row scoring for any drawable batch — including
+left-padded masks, short histories and bucket padding — and the serve
+recurrence replayed step by step lands on the windowed score exactly
+(numpy path).
+
+Slow lane (CI installs hypothesis; the container may not have it — the
+deterministic always-run equivalents live in test_forecast.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container; "
+    "deterministic forecast coverage lives in test_forecast.py"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+from repro.core import JAX_FEATURES, SlidingStageWindow  # noqa: E402
+from repro.core.fleet import pack_sequences  # noqa: E402
+from repro.models.forecast_ssd import (  # noqa: E402
+    ForecastConfig,
+    forecast_init,
+    forecast_score,
+    forecast_step,
+)
+
+CFG = ForecastConfig(features=4)
+PARAMS = forecast_init(CFG, seed=0)
+
+
+@st.composite
+def batches(draw):
+    """A batch of telemetry sequences with per-row left-pad masks."""
+    S = draw(st.integers(min_value=1, max_value=9))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.lognormal(0.0, 0.7, (S, CFG.length, CFG.features))
+    mask = np.ones((S, CFG.length))
+    for i in range(S):
+        pad = draw(st.integers(min_value=0, max_value=CFG.length - 1))
+        mask[i, :pad] = 0.0
+        x[i, :pad] = 0.0
+    return x, mask
+
+
+class TestBatchInvariance:
+    @given(batches())
+    @settings(max_examples=15, deadline=None)
+    def test_windowed_batched_equals_per_row(self, batch):
+        x, mask = batch
+        full = forecast_score(PARAMS, x, mask=mask, xp=np)
+        for i in range(x.shape[0]):
+            one = forecast_score(PARAMS, x[i:i + 1], mask=mask[i:i + 1],
+                                 xp=np)
+            assert full[i] == one[0]
+
+    @given(batches())
+    @settings(max_examples=15, deadline=None)
+    def test_step_batched_equals_per_row(self, batch):
+        x, mask = batch
+        S = x.shape[0]
+        h = np.zeros((S, CFG.hidden, CFG.state))
+        for t in range(CFG.length):
+            h_full, s_full = forecast_step(PARAMS, x[:, t], h,
+                                           update=mask[:, t], xp=np)
+            for i in range(S):
+                h_one, s_one = forecast_step(PARAMS, x[i:i + 1, t],
+                                             h[i:i + 1],
+                                             update=mask[i:i + 1, t],
+                                             xp=np)
+                np.testing.assert_array_equal(h_full[i], h_one[0])
+                assert s_full[i] == s_one[0]
+            h = h_full
+
+    @given(batches())
+    @settings(max_examples=15, deadline=None)
+    def test_step_replay_equals_windowed(self, batch):
+        """The O(1)-per-tick serve recurrence from h=0 is the windowed
+        training form, bit for bit (numpy path; masked steps freeze)."""
+        x, mask = batch
+        windowed = forecast_score(PARAMS, x, mask=mask, xp=np)
+        h = np.zeros((x.shape[0], CFG.hidden, CFG.state))
+        sc = None
+        for t in range(CFG.length):
+            h, sc = forecast_step(PARAMS, x[:, t], h, update=mask[:, t],
+                                  xp=np)
+        np.testing.assert_array_equal(windowed, sc)
+
+
+@st.composite
+def window_sets(draw):
+    """Live windows with varying node counts and history depths —
+    including empty windows and histories shorter than the pack
+    length."""
+    n_windows = draw(st.integers(min_value=0, max_value=3))
+    windows = []
+    for wi in range(n_windows):
+        w = SlidingStageWindow(f"s{wi}", JAX_FEATURES, max_rows=4096,
+                               quantile=0.9)
+        n_nodes = draw(st.integers(min_value=0, max_value=4))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.default_rng(seed)
+        for n in range(n_nodes):
+            steps = draw(st.integers(min_value=1, max_value=12))
+            for t in range(steps):
+                w.add_row(f"s{wi}/n{n}/step{t}", f"n{n}", float(t),
+                          float(t) + 2.0,
+                          features={"cpu": float(rng.random())})
+        windows.append(w)
+    return windows
+
+
+class TestPackSequencesProperties:
+    @given(window_sets(), st.integers(min_value=1, max_value=8))
+    @settings(max_examples=15, deadline=None)
+    def test_pack_is_sound(self, windows, length):
+        b = pack_sequences(windows, JAX_FEATURES, length, seq_bucket=4)
+        live_nodes = sum(len({w.node_name(int(c))
+                              for c in w.node_codes[w.live_index()]})
+                         for w in windows)
+        assert b.count == live_nodes
+        S, L, F = b.shape
+        assert L == length and F == len(JAX_FEATURES)
+        assert S % 4 == 0 and S >= b.count
+        # real rows: contiguous right-aligned mask, newest step last
+        for i in range(b.count):
+            n = int(b.mask[i].sum())
+            assert n >= 1
+            np.testing.assert_array_equal(b.mask[i, :length - n], 0.0)
+            np.testing.assert_array_equal(b.mask[i, length - n:], 1.0)
+            np.testing.assert_array_equal(b.x[i, :length - n], 0.0)
+        # bucket padding is inert
+        np.testing.assert_array_equal(b.mask[b.count:], 0.0)
+        np.testing.assert_array_equal(b.x[b.count:], 0.0)
+
+    @given(window_sets())
+    @settings(max_examples=15, deadline=None)
+    def test_packed_scores_match_unpadded_tails(self, windows):
+        """Scoring the packed (padded) batch equals scoring each node's
+        raw unpadded tail alone — padding is exactly invisible."""
+        cfg = ForecastConfig(features=len(JAX_FEATURES))
+        params = forecast_init(cfg, seed=1)
+        b = pack_sequences(windows, JAX_FEATURES, cfg.length, seq_bucket=4)
+        if b.count == 0:
+            return
+        packed = forecast_score(params, b.x, mask=b.mask, xp=np)
+        for i in range(b.count):
+            n = int(b.mask[i].sum())
+            tail = b.x[i, cfg.length - n:][None, :, :]
+            alone = forecast_score(params, tail, xp=np)
+            assert packed[i] == alone[0]
